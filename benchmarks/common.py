@@ -1,0 +1,87 @@
+"""Shared benchmark harness: builds engines, caches traces to JSON."""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+
+RESULTS = Path(__file__).parent / "results"
+RESULTS.mkdir(exist_ok=True)
+
+
+def build_algo(env, algo_name, *, n_models=3, imagine_batch=48,
+               imagine_horizon=40, model_hidden=96, policy_hidden=48):
+    from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=model_hidden,
+                         n_models=n_models)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=policy_hidden)
+    acfg = AlgoConfig(algo=algo_name, imagine_batch=imagine_batch,
+                      imagine_horizon=imagine_horizon, n_models=n_models)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    return ens, pol, algo
+
+
+def run_engine(env_name, algo_name, engine, *, trajs=20, seed=0, tag="",
+               cache=True, **rc_kw):
+    """Run one (env, algo, engine) combo; returns the eval trace.
+    Results cached in benchmarks/results/."""
+    from repro.core import (AsyncTrainer, PartialAsyncDataPolicy,
+                            PartialAsyncModelPolicy, RunConfig,
+                            SequentialTrainer)
+    from repro.envs import make_env
+    from repro.mbrl.model_free import ModelFreeTrainer
+    from repro.mbrl.policy import PolicyConfig
+
+    name = f"{env_name}_{algo_name}_{engine}_{trajs}_{seed}{tag}"
+    path = RESULTS / f"{name}.json"
+    if cache and path.exists():
+        return json.loads(path.read_text())
+
+    env = make_env(env_name)
+    rc = RunConfig(total_trajs=trajs, seed=seed, **rc_kw)
+    t0 = time.time()
+    if engine.startswith("mf-"):
+        pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=48)
+        tr = ModelFreeTrainer(env, pol, rc, algo=engine[3:])
+        trace = tr.run()
+    else:
+        ens, pol, algo = build_algo(env, algo_name)
+        eng = {"async": AsyncTrainer, "sequential": SequentialTrainer,
+               "partial-model": PartialAsyncModelPolicy,
+               "partial-data": PartialAsyncDataPolicy}[engine]
+        trace = eng(env, ens, algo, rc).run()
+    out = {"env": env_name, "algo": algo_name, "engine": engine,
+           "trajs": trajs, "seed": seed,
+           "real_seconds": round(time.time() - t0, 1), "trace": trace}
+    path.write_text(json.dumps(out, indent=1))
+    return out
+
+
+def time_to_threshold(trace, threshold):
+    """First virtual time at which eval_return >= threshold (None if never)."""
+    for r in trace:
+        if r["eval_return"] >= threshold:
+            return r["time"]
+    return None
+
+
+def best_return(trace):
+    return max(r["eval_return"] for r in trace)
+
+
+def final_time(trace):
+    return trace[-1]["time"]
+
+
+def auc_return(trace, x="time"):
+    """Area under the (x, return) curve — sample-efficiency summary."""
+    if len(trace) < 2:
+        return trace[0]["eval_return"] if trace else 0.0
+    tot, span = 0.0, 0.0
+    for a, b in zip(trace[:-1], trace[1:]):
+        dx = b[x] - a[x]
+        tot += 0.5 * (a["eval_return"] + b["eval_return"]) * dx
+        span += dx
+    return tot / max(span, 1e-9)

@@ -1,0 +1,75 @@
+"""End-to-end training driver: pre-train a transformer world model for a
+few hundred steps on synthetic trajectory-token data.
+
+Model: a scaled-down GLM4-family decoder (~10M params by default; pass
+--big for ~100M — slower on CPU, the intended pod workload). Data: an
+in-repo synthetic 'tokenised dynamics' stream — a mixture of periodic
+patterns the model must learn to predict, standing in for the
+trajectory tokeniser of a Dyna-style world model.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import api
+from repro.models.config import InputShape, ModelConfig
+from repro.optim.optimizers import adam
+
+SMALL = ModelConfig(name="wm-10m", family="dense", num_layers=4,
+                    d_model=256, num_heads=8, num_kv_heads=4, d_ff=1024,
+                    vocab_size=2048)
+BIG = ModelConfig(name="wm-100m", family="dense", num_layers=12,
+                  d_model=768, num_heads=12, num_kv_heads=4, d_ff=3072,
+                  vocab_size=8192)
+
+
+def synth_batch(key, batch, seq, vocab):
+    """Deterministic-ish dynamics tokens: s_{t+1} = f(s_t, a_t) mod vocab."""
+    k1, k2 = jax.random.split(key)
+    s0 = jax.random.randint(k1, (batch, 1), 0, vocab)
+    acts = jax.random.randint(k2, (batch, seq), 0, 7)
+
+    def step(s, a):
+        s2 = (s * 31 + a * 131 + 17) % vocab
+        return s2, s2
+
+    _, toks = jax.lax.scan(lambda c, a: step(c, a), s0[:, 0],
+                           jnp.swapaxes(acts, 0, 1))
+    toks = jnp.swapaxes(toks, 0, 1)
+    return {"tokens": toks, "labels": toks}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--big", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    cfg = BIG if args.big else SMALL
+    mesh = make_smoke_mesh()
+    shape = InputShape("wm", args.seq, args.batch, "train")
+    bundle = api.build(cfg, mesh, shape)
+    key = jax.random.key(0)
+    from repro.models import lm as LM
+    params = LM.init_params(cfg, bundle.ctx, key)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"world model {cfg.name}: {n/1e6:.1f}M params")
+    opt = adam(3e-3)
+    opt_state = opt.init(params)
+    t0 = time.time()
+    for step in range(args.steps):
+        key, k = jax.random.split(key)
+        batch = synth_batch(k, args.batch, args.seq, cfg.vocab_size)
+        params, opt_state, m = bundle.fn(params, opt_state, batch)
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+    print("final loss should approach 0 — the dynamics are deterministic.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.io import (latest_step, load_pytree, restore,
+                                 save_pytree)

@@ -1,0 +1,102 @@
+"""Checkpointing: flat-key .npz pytree snapshots (no orbax offline).
+
+Layout: <dir>/step_<N>/arrays.npz + tree.json (structure + dtypes).
+Works for params, optimizer states, MBRL worker states — anything made of
+array leaves. Atomic via tmp-dir rename; keeps the last ``keep`` steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SEP = "/"
+
+# numpy's savez can't round-trip ml_dtypes (bfloat16 etc.); store them as
+# same-width unsigned ints and view back on load.
+_EXOTIC = {np.dtype(ml_dtypes.bfloat16): np.uint16,
+           np.dtype(ml_dtypes.float8_e4m3fn): np.uint8}
+
+
+def _to_storable(a):
+    a = np.asarray(a)
+    if a.dtype in _EXOTIC:
+        return a.view(_EXOTIC[a.dtype])
+    return a
+
+
+def _from_storable(a, dtype):
+    dt = np.dtype(dtype)
+    if dt in _EXOTIC:
+        return a.view(dt)
+    return a.astype(dt)
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_pytree(path, tree, *, step: Optional[int] = None, keep: int = 3):
+    """Save under path/step_<N> (or path directly if step is None)."""
+    base = Path(path)
+    target = base / f"step_{step:09d}" if step is not None else base
+    tmp = target.with_name(target.name + ".tmp")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    flat, treedef = _flatten(tree)
+    arrays = {f"a{i}": _to_storable(x) for i, x in enumerate(flat)}
+    np.savez(tmp / "arrays.npz", **arrays)
+    (tmp / "tree.json").write_text(json.dumps({
+        "treedef": str(treedef),
+        "n": len(flat),
+        "dtypes": [str(np.asarray(x).dtype) for x in flat],
+        "shapes": [list(np.asarray(x).shape) for x in flat],
+    }))
+    if target.exists():
+        shutil.rmtree(target)
+    os.replace(tmp, target)
+    if step is not None and keep:
+        steps = sorted(p for p in base.glob("step_*") if p.is_dir())
+        for old in steps[:-keep]:
+            shutil.rmtree(old)
+    return target
+
+
+def load_pytree(path, like):
+    """Load into the structure of ``like`` (a pytree template)."""
+    target = Path(path)
+    data = np.load(target / "arrays.npz")
+    flat_like, treedef = _flatten(like)
+    meta = json.loads((target / "tree.json").read_text())
+    assert meta["n"] == len(flat_like), \
+        f"checkpoint has {meta['n']} leaves, template has {len(flat_like)}"
+    flat = [data[f"a{i}"] for i in range(meta["n"])]
+    out = []
+    for i, (x, tmpl) in enumerate(zip(flat, flat_like)):
+        arr = np.asarray(x)
+        t = np.asarray(tmpl) if not hasattr(tmpl, "dtype") else tmpl
+        assert arr.shape == tuple(t.shape), (arr.shape, t.shape)
+        out.append(_from_storable(arr, meta["dtypes"][i]))
+    return jax.tree.unflatten(treedef, out)
+
+
+def latest_step(path) -> Optional[int]:
+    base = Path(path)
+    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
+                   if p.is_dir())
+    return steps[-1] if steps else None
+
+
+def restore(path, like):
+    """Load the newest step_<N> under path (or path itself)."""
+    step = latest_step(path)
+    target = Path(path) / f"step_{step:09d}" if step is not None else path
+    return load_pytree(target, like), step

@@ -1,0 +1,3 @@
+from repro.configs.registry import (ARCH_IDS, ALIASES, FSDP_ARCHS,
+                                    LONG_CONTEXT, get_config, normalize,
+                                    all_configs)

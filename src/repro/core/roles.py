@@ -1,0 +1,53 @@
+"""Role partitioning of a pod mesh for async MBRL (DESIGN.md §2).
+
+The paper runs three workers on three machines; on a TPU pod the analogue
+is three device groups carved out of one mesh. ``split_roles`` slices the
+leading (``data``/``pod``) axis into collector / model / policy sub-meshes
+in a configurable ratio; each worker then jits its step functions against
+its own sub-mesh while the host-side servers (core/servers.py) carry the
+pulls/pushes between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class RoleSplit:
+    collector: Mesh
+    model: Mesh
+    policy: Mesh
+
+
+def split_roles(mesh: Mesh, *, ratios: Tuple[int, int, int] = (1, 2, 1),
+                axis: str | None = None) -> RoleSplit:
+    """Carve the mesh's leading axis into three role sub-meshes.
+
+    ratios: relative share of the split axis per (collector, model, policy).
+    The split axis defaults to the first axis ("pod" on multi-pod, "data"
+    on a single pod)."""
+    names = list(mesh.axis_names)
+    axis = axis or names[0]
+    ai = names.index(axis)
+    n = mesh.devices.shape[ai]
+    total = sum(ratios)
+    sizes = [max(1, n * r // total) for r in ratios]
+    # fix rounding so sizes sum to n
+    while sum(sizes) > n:
+        sizes[int(np.argmax(sizes))] -= 1
+    while sum(sizes) < n:
+        sizes[int(np.argmin(sizes))] += 1
+    meshes = []
+    start = 0
+    for s in sizes:
+        idx = [slice(None)] * mesh.devices.ndim
+        idx[ai] = slice(start, start + s)
+        sub = mesh.devices[tuple(idx)]
+        meshes.append(Mesh(sub, mesh.axis_names))
+        start += s
+    return RoleSplit(*meshes)

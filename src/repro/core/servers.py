@@ -1,0 +1,122 @@
+"""The three servers of Figure 1a.
+
+Workers communicate EXCLUSIVELY through these: a data buffer server and
+two parameter servers (model, policy). Thread-safe, versioned; ``pull``
+never blocks on a writer (the paper's lock-free spirit at phase
+granularity — see DESIGN.md §2 for the TPU adaptation).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+
+class ParameterServer:
+    """Versioned pytree store (Alg. 1/2/3 'Pull/Push parameters')."""
+
+    def __init__(self, initial=None):
+        self._lock = threading.Lock()
+        self._value = initial
+        self._version = 0 if initial is None else 1
+
+    def push(self, value) -> int:
+        # device->host copy outside the lock; keep the critical section tiny
+        host = jax.tree.map(np.asarray, value)
+        with self._lock:
+            self._value = host
+            self._version += 1
+            return self._version
+
+    def pull(self):
+        """Returns (value, version); value is None until the first push."""
+        with self._lock:
+            return self._value, self._version
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return self._version
+
+
+class DataServer:
+    """FIFO trajectory buffer server (Alg. 1 'Push data', Alg. 2 line 3:
+    'move all trajectories from the remote buffer')."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items: List[Any] = []
+        self._total = 0
+
+    def push(self, traj) -> int:
+        host = jax.tree.map(np.asarray, traj)
+        with self._lock:
+            self._items.append(host)
+            self._total += 1
+            return self._total
+
+    def drain(self) -> List[Any]:
+        """Move ALL pending trajectories to the caller (empties server)."""
+        with self._lock:
+            items, self._items = self._items, []
+            return items
+
+    @property
+    def total_pushed(self) -> int:
+        with self._lock:
+            return self._total
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._items)
+
+
+class LocalBuffer:
+    """Fixed-size FIFO local buffer with a held-out validation split
+    (Alg. 2: model learner trains on its LOCAL buffer; §4 'The local
+    buffer is of fixed size and first-in-first-out')."""
+
+    def __init__(self, max_trajs: int = 200, holdout_frac: float = 0.2):
+        self.max_trajs = max_trajs
+        self.holdout_frac = holdout_frac
+        self._train: List[Any] = []
+        self._val: List[Any] = []
+        self._count = 0
+
+    def extend(self, trajs) -> int:
+        for t in trajs:
+            self._count += 1
+            # deterministic interleave keeps val non-empty and ~frac
+            if self.holdout_frac > 0 and \
+                    self._count % max(int(round(1 / self.holdout_frac)), 2) == 0:
+                self._val.append(t)
+                if len(self._val) > max(self.max_trajs // 4, 1):
+                    self._val.pop(0)
+            else:
+                self._train.append(t)
+                if len(self._train) > self.max_trajs:
+                    self._train.pop(0)
+        return len(trajs)
+
+    def _stack(self, items):
+        if not items:
+            return None
+        cat = {k: np.concatenate([t[k] for t in items], axis=0)
+               for k in items[0]}
+        return cat
+
+    def train_arrays(self):
+        return self._stack(self._train)
+
+    def val_arrays(self):
+        return self._stack(self._val if self._val else self._train[-1:])
+
+    @property
+    def n_train(self):
+        return len(self._train)
+
+    @property
+    def total_seen(self):
+        return self._count

@@ -1,0 +1,137 @@
+"""The three workers of Figure 1a, each a pull -> step -> push loop with
+the MINIMAL unit of work (one rollout / one model epoch / one policy
+gradient step). The same worker objects run either as real threads
+(production) or inside the deterministic discrete-event engine
+(benchmarks) — see runtime.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.servers import DataServer, LocalBuffer, ParameterServer
+from repro.mbrl import dynamics as DYN
+from repro.mbrl import policy as PI
+from repro.mbrl.early_stop import EMAEarlyStop
+
+
+@dataclasses.dataclass
+class WorkerTimes:
+    """Nominal virtual durations (seconds) of each worker's step — used by
+    the VirtualClock / discrete-event engine to reproduce the paper's
+    real-robot timing (DESIGN.md §2)."""
+    trajectory: float       # horizon * env.dt (robot time; exact)
+    model_epoch: float = 1.0
+    policy_step: float = 0.5
+
+
+class DataCollectionWorker:
+    """Algorithm 1. Pull policy θ -> collect ONE trajectory -> push."""
+
+    def __init__(self, env, policy_server: ParameterServer,
+                 data_server: DataServer, init_policy_params, key,
+                 *, speed: float = 1.0):
+        self.env = env
+        self.policy_server = policy_server
+        self.data_server = data_server
+        self._key = key
+        self._fallback = jax.tree.map(np.asarray, init_policy_params)
+        self.speed = speed  # >1: faster collection (Fig. 5b)
+        self.collected = 0
+        self._rollout = jax.jit(
+            lambda p, k: env.rollout(k, PI.sample_action, p))
+
+    def step(self) -> float:
+        params, _ = self.policy_server.pull()           # Pull
+        if params is None:
+            params = self._fallback
+        self._key, k = jax.random.split(self._key)
+        traj = self._rollout(params, k)                 # Step
+        self.data_server.push(traj)                     # Push
+        self.collected += 1
+        return (self.env.horizon * self.env.dt) / self.speed
+
+
+class ModelLearningWorker:
+    """Algorithm 2. Drain data -> one epoch on the local FIFO buffer (with
+    EMA-validation early stopping, §5.4) -> push φ."""
+
+    def __init__(self, ens_cfg: DYN.EnsembleConfig,
+                 data_server: DataServer, model_server: ParameterServer,
+                 key, *, max_trajs: int = 200, ema_weight: float = 0.9,
+                 early_stop: bool = True, min_trajs: int = 4):
+        self.cfg = ens_cfg
+        self.data_server = data_server
+        self.model_server = model_server
+        self.buffer = LocalBuffer(max_trajs=max_trajs)
+        self._key, k0 = jax.random.split(key)
+        self.params = DYN.init_ensemble(ens_cfg, k0)
+        opt, self._train_epoch, self._val_loss = DYN.make_model_trainer(
+            ens_cfg)
+        self.opt_state = opt.init(self.params)
+        self.stopper = EMAEarlyStop(weight=ema_weight, enabled=early_stop)
+        self.epochs = 0
+        self._have_data = False
+        # the policy worker blocks on the model server, so deferring the
+        # first push until a small initial dataset exists reproduces the
+        # paper's 'acquire an initial dataset' phase (§5.3)
+        self.min_trajs = min_trajs
+
+    def _refresh_data(self) -> bool:
+        new = self.data_server.drain()                  # Pull (move all)
+        if new:
+            self.buffer.extend(new)
+            self._have_data = True
+            self.stopper.reset()                        # §4: resume training
+        return bool(new)
+
+    def step(self) -> Optional[float]:
+        """One epoch; returns None when idle (no data / early-stopped)."""
+        self._refresh_data()
+        if not self._have_data or self.buffer.total_seen < self.min_trajs:
+            return None
+        if self.stopper.stopped:
+            return None
+        data = self.buffer.train_arrays()
+        val = self.buffer.val_arrays()
+        self.params = DYN.update_normalizer(
+            self.params, data["obs"], data["act"], data["next_obs"])
+        self._key, k = jax.random.split(self._key)
+        self.params, self.opt_state, tr_loss = self._train_epoch(
+            self.params, self.opt_state, data["obs"], data["act"],
+            data["next_obs"], k)
+        vloss = float(self._val_loss(self.params, val["obs"], val["act"],
+                                     val["next_obs"]))
+        self.stopper.update(vloss)
+        self.epochs += 1
+        self.model_server.push(self.params)             # Push
+        return vloss
+
+
+class PolicyImprovementWorker:
+    """Algorithm 3. Pull φ -> ONE policy-improvement step (TRPO/PPO/MB-MPO
+    on imagined rollouts) -> push θ."""
+
+    def __init__(self, algo, policy_server: ParameterServer,
+                 model_server: ParameterServer, key):
+        self.algo = algo
+        self.policy_server = policy_server
+        self.model_server = model_server
+        self._key, k0 = jax.random.split(key)
+        self.state = algo.init(k0)
+        self.policy_server.push(self.state["policy"])
+        self.steps = 0
+
+    def step(self) -> bool:
+        model_params, ver = self.model_server.pull()    # Pull
+        if model_params is None:
+            return False
+        self._key, k = jax.random.split(self._key)
+        self.state, info = self.algo.improve(self.state, model_params, k)
+        self.steps += 1
+        self.policy_server.push(self.state["policy"])   # Push
+        return True

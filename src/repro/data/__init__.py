@@ -1,0 +1,1 @@
+from repro.data.synthetic import DynamicsTokenStream, trajectory_tokens

@@ -1,0 +1,70 @@
+"""Data pipeline for world-model pre-training.
+
+Two sources:
+
+* ``DynamicsTokenStream`` — deterministic synthetic 'tokenised dynamics'
+  (s_{t+1} = f(s_t, a_t) mod V): an infinite, seekable stream used by the
+  training examples and perf tests. Deterministic per (seed, step) so a
+  restored checkpoint resumes on identical data.
+* ``trajectory_tokens`` — discretises real MBRL trajectories (obs/act from
+  the replay buffer) into world-model token sequences via per-dimension
+  uniform binning, the bridge between the paper's replay buffer and the
+  transformer world models.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicsTokenStream:
+    vocab: int
+    seq_len: int
+    batch: int
+    seed: int = 0
+
+    def batch_at(self, step: int):
+        """Batch for global step ``step`` (pure function of (seed, step))."""
+        key = jax.random.fold_in(jax.random.key(self.seed), step)
+        k1, k2 = jax.random.split(key)
+        s0 = jax.random.randint(k1, (self.batch,), 0, self.vocab)
+        acts = jax.random.randint(k2, (self.batch, self.seq_len), 0, 7)
+
+        def step_fn(s, a):
+            s2 = (s * 31 + a * 131 + 17) % self.vocab
+            return s2, s2
+
+        _, toks = jax.lax.scan(step_fn, s0, jnp.swapaxes(acts, 0, 1))
+        toks = jnp.swapaxes(toks, 0, 1).astype(jnp.int32)
+        return {"tokens": toks, "labels": toks}
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def trajectory_tokens(obs, act, *, bins: int = 32, obs_low=None,
+                      obs_high=None):
+    """Discretise (H, obs_dim) observations + (H, act_dim) actions into a
+    single interleaved token sequence: per timestep,
+    [obs_dim tokens][act_dim tokens]. Token ids are offset per dimension so
+    the vocabulary factorises: vocab = bins * (obs_dim + act_dim)."""
+    obs = jnp.asarray(obs)
+    act = jnp.asarray(act)
+    H, D = obs.shape
+    A = act.shape[1]
+    lo = jnp.asarray(obs_low) if obs_low is not None else obs.min(0)
+    hi = jnp.asarray(obs_high) if obs_high is not None else obs.max(0)
+    obs_bin = jnp.clip(((obs - lo) / jnp.maximum(hi - lo, 1e-6)
+                        * (bins - 1)).astype(jnp.int32), 0, bins - 1)
+    act_bin = jnp.clip(((jnp.clip(act, -1, 1) + 1) / 2
+                        * (bins - 1)).astype(jnp.int32), 0, bins - 1)
+    obs_tok = obs_bin + (jnp.arange(D) * bins)[None, :]
+    act_tok = act_bin + ((D + jnp.arange(A)) * bins)[None, :]
+    return jnp.concatenate([obs_tok, act_tok], axis=1).reshape(-1)

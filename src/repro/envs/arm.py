@@ -1,0 +1,143 @@
+"""Torque-controlled planar/spatial arms with the paper's PR2 reward.
+
+``Reacher2`` is a 2-link planar arm; ``Arm7`` mirrors the paper's PR2
+setup: 7 joints, torque control at 10 Hz, 23-D observation (7 angles,
+7 velocities, 9 Cartesian points of the end-effector frame), and reward
+
+    r(d) = -omega * d^2 - v * log(d^2 + alpha)        (omega=v=1, a=1e-5)
+
+plus scaled quadratic penalties on joint velocities and torques (§5.5).
+Tasks (reach / shape-match / lego-stack) differ only in target and
+tolerance, exactly as in the paper where objects are treated as fixed
+end-effector extensions."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env
+
+
+def lorentzian_reward(d2, omega=1.0, v=1.0, alpha=1e-5):
+    return -omega * d2 - v * jnp.log(d2 + alpha)
+
+
+@dataclasses.dataclass(frozen=True)
+class Reacher2(Env):
+    obs_dim: int = 8   # cos2, sin2, qdot2, fingertip xy
+    act_dim: int = 2
+    horizon: int = 100
+    dt: float = 0.05
+    name: str = "reacher2"
+    l1: float = 0.5
+    l2: float = 0.5
+    target: tuple = (0.6, 0.4)
+
+    def _tip(self, q):
+        x = self.l1 * jnp.cos(q[0]) + self.l2 * jnp.cos(q[0] + q[1])
+        y = self.l1 * jnp.sin(q[0]) + self.l2 * jnp.sin(q[0] + q[1])
+        return jnp.array([x, y])
+
+    def _obs(self, q, qd):
+        tip = self._tip(q)
+        return jnp.concatenate([jnp.cos(q), jnp.sin(q), qd, tip])
+
+    def reset(self, key):
+        q = jax.random.uniform(key, (2,), minval=-0.1, maxval=0.1)
+        return self._obs(q, jnp.zeros(2))
+
+    def step(self, state, action):
+        q = jnp.arctan2(state[2:4], state[0:2])
+        qd = state[4:6]
+        u = jnp.clip(action, -1, 1)
+        qdd = 4.0 * u - 0.5 * qd      # damped double integrator per joint
+        qd = jnp.clip(qd + qdd * self.dt, -8, 8)
+        q = q + qd * self.dt
+        ns = self._obs(q, qd)
+        return ns, self.reward(state, action, ns)
+
+    def reward(self, s, a, s2):
+        u = jnp.clip(a, -1, 1)
+        tip = s2[6:8]
+        d2 = jnp.sum((tip - jnp.asarray(self.target)) ** 2)
+        return lorentzian_reward(d2) - 0.01 * jnp.sum(s2[4:6] ** 2) \
+            - 0.001 * jnp.sum(u ** 2)
+
+
+_PR2_TASKS = {
+    # target xyz in the arm frame; tolerance used only for reporting
+    "reach": (jnp.array([0.5, 0.2, 0.3]), 0.02),
+    "shape_match": (jnp.array([0.45, -0.1, 0.15]), 0.01),
+    "lego_stack": (jnp.array([0.4, 0.15, 0.1]), 0.005),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Arm7(Env):
+    obs_dim: int = 23  # 7q + 7qd + 9 cartesian points (3 frame points x 3)
+    act_dim: int = 7
+    horizon: int = 100
+    dt: float = 0.1     # 10 Hz, as on the PR2
+    name: str = "arm7_reach"
+    task: str = "reach"
+    link: float = 0.18
+
+    def _fk(self, q):
+        """Simple spatial FK: alternating z/y rotation axes down the chain.
+        Returns end-effector origin + two frame points (9 numbers)."""
+        p = jnp.zeros(3)
+        R = jnp.eye(3)
+        for i in range(7):
+            axis = i % 2  # 0: rotate about z, 1: about y
+            c, s = jnp.cos(q[i]), jnp.sin(q[i])
+            Rz = jnp.array([[c, -s, 0], [s, c, 0], [0, 0, 1]])
+            Ry = jnp.array([[c, 0, s], [0, 1, 0], [-s, 0, c]])
+            R = R @ jnp.where(axis == 0, Rz, Ry)
+            p = p + R @ jnp.array([self.link, 0.0, 0.0])
+        tip = p
+        fx = p + 0.05 * R[:, 0]
+        fy = p + 0.05 * R[:, 1]
+        return jnp.concatenate([tip, fx, fy])
+
+    def _obs(self, q, qd):
+        return jnp.concatenate([q, qd, self._fk(q)])
+
+    def reset(self, key):
+        q = 0.1 * jax.random.normal(key, (7,))
+        return self._obs(q, jnp.zeros(7))
+
+    def step(self, state, action):
+        q, qd = state[:7], state[7:14]
+        u = jnp.clip(action, -1, 1)
+        qdd = 6.0 * u - 1.0 * qd - 0.3 * jnp.sin(q)  # gravity-ish bias
+        qd = jnp.clip(qd + qdd * self.dt, -4, 4)
+        q = jnp.clip(q + qd * self.dt, -2.8, 2.8)
+        ns = self._obs(q, qd)
+        return ns, self.reward(state, action, ns)
+
+    def reward(self, s, a, s2):
+        u = jnp.clip(a, -1, 1)
+        target, _tol = _PR2_TASKS[self.task]
+        d2 = jnp.sum((s2[14:17] - target) ** 2)
+        return lorentzian_reward(d2) - 0.05 * jnp.sum(s2[7:14] ** 2) \
+            - 0.01 * jnp.sum(u ** 2)
+
+    def distance(self, state):
+        target, _ = _PR2_TASKS[self.task]
+        return jnp.linalg.norm(state[14:17] - target)
+
+
+def make_env(name: str) -> Env:
+    from repro.envs.classic import CartpoleSwingup, Pendulum, SpringHopper
+    table = {
+        "pendulum": Pendulum(),
+        "cartpole_swingup": CartpoleSwingup(),
+        "spring_hopper": SpringHopper(),
+        "reacher2": Reacher2(),
+        "pr2_reach": Arm7(task="reach", name="arm7_reach"),
+        "pr2_shape_match": Arm7(task="shape_match", name="arm7_shape"),
+        "pr2_lego_stack": Arm7(task="lego_stack", name="arm7_lego"),
+    }
+    return table[name]

@@ -1,0 +1,64 @@
+"""Pure-JAX continuous-control environments.
+
+Each env is a stateless dataclass with::
+
+  reset(key)            -> state  (obs == state here; both jnp arrays)
+  step(state, action)   -> (next_state, reward)
+  obs_dim / act_dim / horizon / dt (control period, seconds)
+
+Being pure jnp, envs jit/vmap — the data-collection worker is itself a JAX
+program (see DESIGN.md hardware-adaptation notes). ``dt`` drives the
+paper's wall-clock simulation: collecting one trajectory "takes"
+horizon * dt seconds of robot time (§5.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    obs_dim: int
+    act_dim: int
+    horizon: int
+    dt: float  # control period in seconds (1/control frequency)
+    name: str = "env"
+
+    def reset(self, key):
+        raise NotImplementedError
+
+    def step(self, state, action):
+        raise NotImplementedError
+
+    def reward(self, s, a, s2):
+        """Reward as a function of (s, a, s') — used by imagination."""
+        raise NotImplementedError
+
+    def reset_batch(self, key, n: int):
+        return jax.vmap(self.reset)(jax.random.split(key, n))
+
+    # ------------------------------------------------------------------
+    def rollout(self, key, policy_fn, policy_params, *, horizon=None):
+        """Collect one trajectory with a policy. Returns dict of stacked
+        (obs, act, next_obs, reward)."""
+        H = horizon or self.horizon
+        k0, key = jax.random.split(key)
+        s0 = self.reset(k0)
+
+        def step_fn(carry, k):
+            s = carry
+            a = policy_fn(policy_params, s, k)
+            s2, r = self.step(s, a)
+            return s2, (s, a, s2, r)
+
+        _, (obs, act, nobs, rew) = jax.lax.scan(
+            step_fn, s0, jax.random.split(key, H))
+        return {"obs": obs, "act": act, "next_obs": nobs, "rew": rew}
+
+
+def angle_normalize(x):
+    return ((x + jnp.pi) % (2 * jnp.pi)) - jnp.pi

@@ -1,0 +1,126 @@
+"""Pendulum swing-up, cart-pole swing-up and a planar hopper-like
+benchmark, all as analytic jnp dynamics (MuJoCo is unavailable offline —
+see DESIGN.md assumption table)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.envs.base import Env, angle_normalize
+
+
+@dataclasses.dataclass(frozen=True)
+class Pendulum(Env):
+    obs_dim: int = 3
+    act_dim: int = 1
+    horizon: int = 200
+    dt: float = 0.05
+    name: str = "pendulum"
+    g: float = 10.0
+    m: float = 1.0
+    l: float = 1.0
+    max_torque: float = 2.0
+    max_speed: float = 8.0
+
+    def reset(self, key):
+        th = jax.random.uniform(key, (), minval=-jnp.pi, maxval=jnp.pi)
+        thdot = jax.random.uniform(jax.random.fold_in(key, 1), (),
+                                   minval=-1.0, maxval=1.0)
+        return jnp.array([jnp.cos(th), jnp.sin(th), thdot])
+
+    def reward(self, s, a, s2):
+        th = jnp.arctan2(s[1], s[0])
+        u = jnp.clip(a[0], -self.max_torque, self.max_torque)
+        cost = angle_normalize(th) ** 2 + 0.1 * s[2] ** 2 + 0.001 * u ** 2
+        return -cost
+
+    def step(self, state, action):
+        cos_th, sin_th, thdot = state
+        th = jnp.arctan2(sin_th, cos_th)
+        u = jnp.clip(action[0], -self.max_torque, self.max_torque)
+        thdot2 = thdot + (3 * self.g / (2 * self.l) * jnp.sin(th)
+                          + 3.0 / (self.m * self.l ** 2) * u) * self.dt
+        thdot2 = jnp.clip(thdot2, -self.max_speed, self.max_speed)
+        th2 = th + thdot2 * self.dt
+        ns = jnp.array([jnp.cos(th2), jnp.sin(th2), thdot2])
+        return ns, self.reward(state, action, ns)
+
+
+@dataclasses.dataclass(frozen=True)
+class CartpoleSwingup(Env):
+    obs_dim: int = 5
+    act_dim: int = 1
+    horizon: int = 200
+    dt: float = 0.05
+    name: str = "cartpole_swingup"
+    mc: float = 1.0
+    mp: float = 0.1
+    l: float = 0.5
+    g: float = 9.8
+    fmax: float = 10.0
+
+    def reset(self, key):
+        x = 0.05 * jax.random.normal(key, (4,))
+        th = jnp.pi + x[2]  # hanging down
+        return jnp.array([x[0], x[1], jnp.cos(th), jnp.sin(th), x[3]])
+
+    def step(self, state, action):
+        x, xdot, costh, sinth, thdot = state
+        th = jnp.arctan2(sinth, costh)
+        f = jnp.clip(action[0], -1, 1) * self.fmax
+        mt = self.mc + self.mp
+        tmp = (f + self.mp * self.l * thdot ** 2 * sinth) / mt
+        thacc = (self.g * sinth - costh * tmp) / (
+            self.l * (4.0 / 3.0 - self.mp * costh ** 2 / mt))
+        xacc = tmp - self.mp * self.l * thacc * costh / mt
+        x = x + xdot * self.dt
+        xdot = xdot + xacc * self.dt
+        th = th + thdot * self.dt
+        thdot = thdot + thacc * self.dt
+        ns = jnp.array([x, xdot, jnp.cos(th), jnp.sin(th), thdot])
+        return ns, self.reward(state, action, ns)
+
+    def reward(self, s, a, s2):
+        f = jnp.clip(a[0], -1, 1) * self.fmax
+        return s2[2] - 0.01 * s2[0] ** 2 - 0.001 * f ** 2 \
+            - 0.001 * s2[4] ** 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SpringHopper(Env):
+    """1-D hopper: mass on an actuated spring leg; reward = forward hop
+    velocity while staying alive. A cheap stand-in for locomotion tasks."""
+    obs_dim: int = 4
+    act_dim: int = 1
+    horizon: int = 200
+    dt: float = 0.02
+    name: str = "spring_hopper"
+    g: float = 9.8
+    k_spring: float = 80.0
+    m: float = 1.0
+
+    def reset(self, key):
+        z = 1.0 + 0.05 * jax.random.normal(key, ())
+        return jnp.array([0.0, z, 0.0, 0.0])  # x, z, xdot, zdot
+
+    def step(self, state, action):
+        x, z, xdot, zdot = state
+        u = jnp.clip(action[0], -1, 1)
+        contact = z < 0.5
+        f_spring = jnp.where(contact, self.k_spring * (0.5 - z) * (1 + u), 0.0)
+        f_fwd = jnp.where(contact, 3.0 * u, 0.0)
+        zacc = f_spring / self.m - self.g
+        xacc = f_fwd / self.m - 0.5 * xdot
+        x = x + xdot * self.dt
+        z = jnp.clip(z + zdot * self.dt, 0.05, 3.0)
+        xdot = xdot + xacc * self.dt
+        zdot = jnp.where(z <= 0.05, jnp.maximum(zdot + zacc * self.dt, 0.0),
+                         zdot + zacc * self.dt)
+        ns = jnp.array([x, z, xdot, zdot])
+        return ns, self.reward(state, action, ns)
+
+    def reward(self, s, a, s2):
+        u = jnp.clip(a[0], -1, 1)
+        return s2[2] - 0.001 * u ** 2 + 0.1 * jnp.clip(s2[1], 0, 1)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import (
+    attention, decode_attention_partial, combine_partials,
+)

@@ -1,0 +1,150 @@
+"""Pure-jnp oracle for blocked (flash-style) attention.
+
+Supports GQA natively (``num_q_heads`` a multiple of ``num_kv_heads``),
+causal masking and an optional sliding window. The chunked variant keeps
+peak memory at O(S * block_k) per head instead of O(S^2) and is what the
+dry-run lowers on non-TPU backends; ``naive`` materialises the full score
+matrix and is the ground-truth oracle for tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(q_idx, k_idx, causal: bool, window: int):
+    """True where attention is allowed."""
+    m = jnp.ones((q_idx.shape[0], k_idx.shape[0]), bool)
+    if causal:
+        m &= k_idx[None, :] <= q_idx[:, None]
+    if window and window > 0:
+        m &= k_idx[None, :] > (q_idx[:, None] - window)
+    return m
+
+
+def naive_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    scale: float | None = None):
+    """q: (B, Sq, Hq, D); k, v: (B, Sk, Hkv, D). Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    q_idx = jnp.arange(Sq) + (Sk - Sq)  # align ends (decode/prefill offset)
+    k_idx = jnp.arange(Sk)
+    m = _mask(q_idx, k_idx, causal, window)
+    s = jnp.where(m[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      scale: float | None = None, block_q: int = 512,
+                      block_k: int = 512):
+    """Online-softmax attention; same contract as :func:`naive_attention`.
+
+    Memory-bounded reference used when the Pallas kernel is unavailable
+    (CPU dry-run). Structured as scan-over-kv-blocks inside map-over-q-blocks
+    so the lowered HLO stays small for long sequences.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    # pad to block multiples
+    pq = (-Sq) % block_q
+    pk = (-Sk) % block_k
+    qf = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0))).astype(jnp.float32)
+    kf = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
+    vf = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0))).astype(jnp.float32)
+    nq, nk = qf.shape[1] // block_q, kf.shape[1] // block_k
+    qf = qf.reshape(B, nq, block_q, Hkv, G, D)
+    kb = kf.reshape(B, nk, block_k, Hkv, D)
+    vb = vf.reshape(B, nk, block_k, Hkv, D)
+    offset = Sk - Sq  # query i has absolute position i + offset
+
+    def q_block(carry_qi):
+        qi, qblk = carry_qi  # qblk: (B, block_q, Hkv, G, D)
+        q_idx = qi * block_q + jnp.arange(block_q) + offset
+
+        def kv_step(carry, kv):
+            m_run, d_run, o_run = carry
+            ki, kblk, vblk = kv
+            k_idx = ki * block_k + jnp.arange(block_k)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk) * scale
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= k_idx[None, :] <= q_idx[:, None]
+            if window and window > 0:
+                mask &= k_idx[None, :] > (q_idx[:, None] - window)
+            mask &= (k_idx[None, :] < Sk)  # kv padding
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(-1))
+            alpha = jnp.exp(m_run - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            d_new = d_run * alpha + p.sum(-1)
+            o_new = o_run * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, vblk)
+            return (m_new, d_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, G, block_q), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, Hkv, G, block_q), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, block_q, D), jnp.float32)
+        (m, d, o), _ = jax.lax.scan(
+            kv_step, (m0, d0, o0),
+            (jnp.arange(nk), jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0)))
+        o = o / jnp.maximum(d[..., None], 1e-30)
+        return jnp.einsum("bhgqd->bqhgd", o)
+
+    out = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(qf, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * block_q, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def decode_attention_partial(q, k_cache, v_cache, length, *, start: int = 0,
+                             scale: float | None = None):
+    """Single-token decode attention over a (possibly sharded) KV cache slice.
+
+    q: (B, Hq, D); k_cache/v_cache: (B, S_loc, Hkv, D); ``length`` is the
+    number of valid GLOBAL positions; ``start`` is this shard's global offset.
+    Returns (o_weighted, lse) for cross-shard logsumexp combination:
+      o_weighted: (B, Hq, D) = sum_j softmax-unnorm weights * v / exp(lse)
+      lse:        (B, Hq)     local log-sum-exp.
+    """
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32)) * scale
+    pos = start + jnp.arange(S)
+    s = jnp.where((pos < length)[None, None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    d = p.sum(-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(d, 1e-30))
+    o = o / jnp.maximum(d[..., None], 1e-30)
+    return o.reshape(B, Hq, D), lse.reshape(B, Hq)
+
+
+def combine_partials(outs, lses):
+    """Combine per-shard (o, lse) partials: softmax-weighted merge.
+
+    outs: (N, B, Hq, D); lses: (N, B, Hq). Used by sequence-sharded decode.
+    """
+    m = lses.max(0)
+    w = jnp.exp(lses - m)  # (N, B, Hq)
+    w = w / jnp.maximum(w.sum(0), 1e-30)
+    return jnp.einsum("nbh,nbhd->bhd", w, outs)

@@ -1,0 +1,1 @@
+from repro.kernels.gmm.ops import ensemble_mlp, grouped_matmul

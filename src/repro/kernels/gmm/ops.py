@@ -1,0 +1,33 @@
+"""Dispatching wrapper for grouped matmul / ensemble MLP."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.gmm import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:  # pragma: no cover
+        return False
+
+
+def grouped_matmul(lhs, rhs, *, impl: str | None = None,
+                   interpret: bool = False):
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        from repro.kernels.gmm import pallas as pk
+        return pk.grouped_matmul(lhs, rhs, interpret=interpret)
+    return ref.grouped_matmul(lhs, rhs)
+
+
+def ensemble_mlp(members, x, *, impl: str | None = None,
+                 interpret: bool = False):
+    if impl is None:
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "pallas":
+        from repro.kernels.gmm import pallas as pk
+        return pk.ensemble_mlp(members, x, interpret=interpret)
+    return ref.ensemble_mlp(members, x)

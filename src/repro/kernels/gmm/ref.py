@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for grouped/batched matmul kernels.
+
+Two entry points:
+  * ``ensemble_mlp`` — K-member MLP forward on shared inputs (the MBRL
+    dynamics-ensemble hot loop).
+  * ``grouped_matmul`` — (G, M, K) x (G, K, N) batched matmul used by the
+    MoE expert FFN capacity buffers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul(lhs, rhs):
+    """lhs: (G, M, K); rhs: (G, K, N) -> (G, M, N), f32 accumulation."""
+    return jax.lax.dot_general(
+        lhs, rhs, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).astype(lhs.dtype)
+
+
+def ensemble_mlp(members, x):
+    """members: {"w": [ (K,a,b) ... ], "b": [ (K,b) ... ]}; x: (B, Din)
+    shared across members. Returns (K, B, Dout). tanh hidden activations."""
+    K = members["w"][0].shape[0]
+    h = jnp.broadcast_to(x[None], (K,) + x.shape)
+    n = len(members["w"])
+    for i, (w, b) in enumerate(zip(members["w"], members["b"])):
+        h = grouped_matmul(h, w) + b[:, None, :]
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h

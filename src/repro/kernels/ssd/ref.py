@@ -1,0 +1,120 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Implements the chunked algorithm of arXiv:2405.21060 (ssd_minimal):
+quadratic attention-like computation inside fixed-size chunks (MXU-friendly)
+plus a linear recurrence over chunk states. Shapes follow the paper:
+
+  x : (B, L, H, P)   inputs per head (P = head dim)
+  dt: (B, L, H)      softplus-discretised step sizes (already positive)
+  A : (H,)           negative scalar decay per head
+  B_: (B, L, G, N)   input projection (G groups broadcast over H)
+  C : (B, L, G, N)   output projection
+  returns y: (B, L, H, P) and final states (B, H, P, N)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i>=j)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C, *, chunk: int = 128, initial_state=None,
+                return_final_state: bool = False):
+    B, L, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    assert H % G == 0
+    pad = (-L) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)) + ((0, 0),) * (dt.ndim - 2))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Lp = x.shape[1]
+    nc = Lp // chunk
+    f32 = jnp.float32
+    xs = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(B, nc, chunk, H, P)
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(B, nc, chunk, H)
+    Bc = B_.astype(f32).reshape(B, nc, chunk, G, N)
+    Cc = C.astype(f32).reshape(B, nc, chunk, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bc, rep, axis=3)  # (B, nc, Q, H, N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    dA_cum = jnp.cumsum(dA, axis=2)                       # (B, nc, Q, H)
+    # 1. intra-chunk (diagonal blocks)
+    Ltri = jnp.exp(segsum(jnp.moveaxis(dA, 2, -1)))       # (B, nc, H, Q, Q)
+    y_diag = jnp.einsum("bcqhn,bckhn,bchqk,bckhp->bcqhp", Ch, Bh, Ltri, xs)
+    # 2. per-chunk final states
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B, nc, Q, H)
+    states = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Bh, decay_states, xs)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (B, nc, H)
+    s0 = (jnp.zeros((B, H, P, N), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def step(s, inp):
+        dec, st = inp  # dec: (B, H), st: (B, H, P, N)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s
+
+    s_final, states_prev = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)          # (B, nc, H, P, N)
+    # 4. inter-chunk output
+    state_decay_out = jnp.exp(dA_cum)                      # (B, nc, Q, H)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, states_prev,
+                       state_decay_out)
+    y = (y_diag + y_off).reshape(B, Lp, H, P)[:, :L]
+    if return_final_state:
+        return y.astype(x.dtype), s_final
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token recurrent update.
+
+    state: (B, H, P, N); x_t: (B, H, P); dt_t: (B, H); B_t/C_t: (B, G, N).
+    Returns (y_t, new_state).
+    """
+    Bsz, H, P, N = state.shape
+    G = B_t.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    dA = jnp.exp(dt_t.astype(f32) * A.astype(f32))          # (B, H)
+    Bh = jnp.repeat(B_t.astype(f32), rep, axis=1)            # (B, H, N)
+    Ch = jnp.repeat(C_t.astype(f32), rep, axis=1)
+    dBx = jnp.einsum("bh,bhp,bhn->bhpn", dt_t.astype(f32), x_t.astype(f32), Bh)
+    new_state = state.astype(f32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, Ch)
+    return y.astype(x_t.dtype), new_state
+
+
+def ssd_sequential(x, dt, A, B_, C, *, initial_state=None,
+                   return_final_state: bool = False):
+    """Token-by-token oracle (slow; ground truth for tests)."""
+    B, L, H, P = x.shape
+    N = B_.shape[-1]
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(s, inp):
+        x_t, dt_t, B_t, C_t = inp
+        y, s = ssd_decode_step(s, x_t, dt_t, A, B_t, C_t)
+        return s, y
+
+    s_final, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+         jnp.moveaxis(B_, 1, 0), jnp.moveaxis(C, 1, 0)))
+    y = jnp.moveaxis(ys, 0, 1)
+    if return_final_state:
+        return y, s_final
+    return y

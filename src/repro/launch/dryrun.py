@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any jax import/init (device count locks on first use).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination against the production meshes, and record the roofline raw
+terms (FLOPs, bytes, per-collective traffic) to JSON.
+
+Usage:
+  python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+
+Nothing is ever allocated at full size: parameters, optimizer state,
+batches and caches are ShapeDtypeStructs (jax.eval_shape), and
+``jit(...).lower(...).compile()`` produces only the executable.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import registry
+from repro.models import api
+from repro.models.config import INPUT_SHAPES, InputShape
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+# --------------------------------------------------------------------------
+# HLO parsing: per-collective bytes, with while-loop trip-count credit
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string like 'bf16[8,128]' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict:
+    """name -> list of instruction lines. Computation headers start at
+    column 0 with '%name (' or 'ENTRY'."""
+    comps = {}
+    order = []
+    cur = None
+    for line in hlo.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%([\w\.\-]+)\s*\(", line)
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            order.append(cur)
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _computation_multipliers(hlo: str) -> dict:
+    """Map computation-name -> effective execution count.
+
+    For every `while` op: the trip count is the largest s32 constant in
+    its condition computation (scan conditions are `i < N`). Nested loops
+    multiply via fixpoint propagation from the enclosing computation."""
+    comps = _split_computations(hlo)
+
+    def cond_trip(cond_name):
+        best = None
+        for ln in comps.get(cond_name, []):
+            for mc in re.finditer(r"s32\[\]\s+constant\((\d+)\)", ln):
+                v = int(mc.group(1))
+                best = v if best is None else max(best, v)
+        return best if best else 1
+
+    edges = []  # (parent_comp, body_comp, trip)
+    for comp, lines in comps.items():
+        for ln in lines:
+            mw = re.search(r"condition=%([\w\.\-]+), body=%([\w\.\-]+)", ln)
+            if mw:
+                edges.append((comp, mw.group(2), cond_trip(mw.group(1))))
+
+    mult = {c: 1 for c in comps}
+    for _ in range(8):  # fixpoint over nesting depth
+        changed = False
+        for parent, body, trip in edges:
+            new = mult.get(parent, 1) * trip
+            if mult.get(body) != new:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return m.group(1).count(",") + 1
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota tile format [n_groups, group_size]
+        return int(m.group(2))
+    return 1
+
+
+def _ici_bytes(c: str, result_bytes: int, g: int) -> float:
+    """Ring-model bytes actually moved per device by one collective."""
+    if g <= 1:
+        return 0.0
+    if c == "all-reduce":
+        return 2.0 * result_bytes * (g - 1) / g
+    if c == "all-gather":
+        return result_bytes * (g - 1) / g
+    if c == "reduce-scatter":                 # result is the scattered shard
+        return result_bytes * (g - 1)
+    if c == "all-to-all":
+        return result_bytes * (g - 1) / g
+    return float(result_bytes)                # collective-permute
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Per-collective traffic from optimized HLO: operand/result bytes AND
+    ring-model ICI bytes (group-size aware), with while-loop trip scaling."""
+    trips = _computation_multipliers(hlo)
+    comps = _split_computations(hlo)
+    out = {c: 0 for c in COLLECTIVES}
+    out["_unscaled"] = 0
+    ici = 0.0
+    coll_re = re.compile(
+        r"=\s*(\([^=]*?\)|\S+)\s+(" + "|".join(COLLECTIVES)
+        + r")(?:-start)?\(")
+    for comp, lines in comps.items():
+        mult = trips.get(comp, 1)
+        for line in lines:
+            m = coll_re.search(line)
+            if not m:
+                continue
+            nbytes = _shape_bytes(m.group(1))
+            c = m.group(2)
+            out[c] += nbytes * mult
+            out["_unscaled"] += nbytes
+            ici += _ici_bytes(c, nbytes, _group_size(line)) * mult
+    out["total"] = sum(out[c] for c in COLLECTIVES)
+    out["ici_bytes"] = int(ici)
+    return out
+
+
+# --------------------------------------------------------------------------
+
+
+def param_count(cfg) -> int:
+    from repro.models.config import ShardCtx
+    mod = api._mod(cfg)
+    ctx = ShardCtx()  # unsharded count
+    abs_p = jax.eval_shape(lambda k: mod.init_params(cfg, ctx, k),
+                           jax.ShapeDtypeStruct((2,), jax.numpy.uint32))
+    return sum(x.size for x in jax.tree.leaves(abs_p))
+
+
+def active_param_count(cfg) -> int:
+    """Params touched per token (MoE: top_k of num_experts experts)."""
+    total = param_count(cfg)
+    if cfg.family != "moe" or not cfg.num_experts:
+        return total
+    expert = cfg.num_layers * 3 * cfg.d_model * cfg.d_ff * cfg.num_experts
+    return total - expert + expert * cfg.top_k // cfg.num_experts
+
+
+OPTIMIZED_TRAIN = {  # §Perf hillclimb settings (see EXPERIMENTS.md)
+    "qwen3_moe_235b_a22b": dict(microbatch_tokens=16384, remat_group=8,
+                                save_collectives=True, zero1=True),
+    "_default": dict(save_collectives=True, microbatch_tokens=4096,
+                     zero1=True),
+}
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               optimized: bool = False, verbose: bool = True) -> dict:
+    from repro.launch.mesh import make_production_mesh
+    arch_n = registry.normalize(arch)
+    shape = INPUT_SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    rec = {"arch": arch_n, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16", "ok": False}
+    if long_ctx and registry.LONG_CONTEXT[arch_n] == "skip":
+        rec["skipped"] = "long_500k inapplicable (see DESIGN.md)"
+        return rec
+    try:
+        cfg = registry.get_config(arch_n, long_context=long_ctx)
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        fsdp = arch_n in registry.FSDP_ARCHS
+        mtok = registry.MICROBATCH_TOKENS.get(arch_n, 8192)
+        kw = dict(fsdp=fsdp, microbatch_tokens=mtok)
+        if optimized:
+            kw.update(OPTIMIZED_TRAIN.get(arch_n, OPTIMIZED_TRAIN["_default"]))
+            if shape.kind == "decode" and fsdp:
+                kw["ws_moe"] = True
+            if shape.kind == "decode":
+                kw["kv_int8"] = True
+        t0 = time.time()
+        bundle = api.build(cfg, mesh, shape, **kw)
+        lowered = bundle.fn.lower(*bundle.abstract_args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        rec.update(ok=True, optimized=optimized, lower_s=round(t_lower, 1),
+                   compile_s=round(t_compile, 1),
+                   num_microbatches=bundle.num_microbatches,
+                   params=param_count(cfg),
+                   active_params=active_param_count(cfg))
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            rec["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals",
+                         "utilization operand 0 {}")
+                or k.startswith("bytes accessed")}
+        except Exception as e:  # pragma: no cover
+            rec["cost_analysis_error"] = str(e)[:200]
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                rec["memory_analysis"] = {
+                    k: int(getattr(ma, k)) for k in dir(ma)
+                    if k.endswith("size_in_bytes") and not k.startswith("_")}
+        except Exception as e:  # pragma: no cover
+            rec["memory_analysis_error"] = str(e)[:200]
+        try:
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["hlo_len"] = len(hlo)
+        except Exception as e:  # pragma: no cover
+            rec["collectives_error"] = str(e)[:200]
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"[:500]
+        rec["traceback"] = traceback.format_exc()[-1500:]
+    if verbose:
+        status = "OK " if rec.get("ok") else ("SKIP" if "skipped" in rec
+                                              else "FAIL")
+        print(f"[{status}] {arch_n:24s} {shape_name:12s} {rec['mesh']:8s}"
+              f" compile={rec.get('compile_s', '-')}s", flush=True)
+        if "error" in rec:
+            print("   ", rec["error"][:300], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos already present in --out")
+    args = ap.parse_args()
+
+    archs = registry.ARCH_IDS if (args.all or not args.arch) \
+        else [registry.normalize(args.arch)]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    out_path = Path(args.out)
+    results = []
+    done = set()
+    if args.resume and out_path.exists():
+        results = json.loads(out_path.read_text())
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+                if r.get("ok") or "skipped" in r}
+
+    for mp in meshes:
+        mesh_name = "2x16x16" if mp else "16x16"
+        for a in archs:
+            for s in shapes:
+                if (a, s, mesh_name) in done:
+                    continue
+                rec = dryrun_one(a, s, multi_pod=mp)
+                results = [r for r in results
+                           if not (r["arch"] == rec["arch"]
+                                   and r["shape"] == rec["shape"]
+                                   and r["mesh"] == rec["mesh"])]
+                results.append(rec)
+                out_path.write_text(json.dumps(results, indent=1))
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if "skipped" in r)
+    print(f"\n{n_ok} ok, {n_skip} skipped, "
+          f"{len(results) - n_ok - n_skip} failed -> {out_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Unified launcher.
+
+Two entry modes:
+
+* ``--task mbrl`` (the paper): asynchronous model-based RL on a pure-JAX
+  env with ME-TRPO / ME-PPO / MB-MPO, async or sequential engines.
+
+      python -m repro.launch.train --task mbrl --env pendulum \
+          --algo me-trpo --engine async --trajs 60
+
+* ``--task lm``: world-model / LM pre-training step loop for any assigned
+  architecture (reduced configs run on CPU; full configs expect a pod).
+
+      python -m repro.launch.train --task lm --arch glm4-9b --reduced \
+          --steps 20 --seq 128 --batch 8
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def run_mbrl(args):
+    from repro.core import (AsyncTrainer, PartialAsyncDataPolicy,
+                            PartialAsyncModelPolicy, RunConfig,
+                            SequentialTrainer)
+    from repro.envs import make_env
+    from repro.mbrl import (AlgoConfig, EnsembleConfig, PolicyConfig,
+                            make_algo)
+
+    env = make_env(args.env)
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=args.model_hidden,
+                         n_models=args.n_models)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=args.policy_hidden)
+    acfg = AlgoConfig(algo=args.algo, imagine_batch=args.imagine_batch,
+                      imagine_horizon=args.imagine_horizon,
+                      n_models=args.n_models)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    rc = RunConfig(total_trajs=args.trajs, seed=args.seed,
+                   collect_speed=args.collect_speed,
+                   ema_weight=args.ema_weight,
+                   early_stop=not args.no_early_stop)
+    engines = {
+        "async": lambda: AsyncTrainer(env, ens, algo, rc, mode=args.mode),
+        "sequential": lambda: SequentialTrainer(env, ens, algo, rc),
+        "partial-model": lambda: PartialAsyncModelPolicy(env, ens, algo, rc),
+        "partial-data": lambda: PartialAsyncDataPolicy(env, ens, algo, rc),
+    }
+    tr = engines[args.engine]()
+    t0 = time.time()
+    trace = tr.run()
+    out = {"engine": args.engine, "algo": args.algo, "env": args.env,
+           "real_seconds": round(time.time() - t0, 1), "trace": trace}
+    print(json.dumps(out["trace"][-1], indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(out, f, indent=1)
+        print("wrote", args.out)
+    return trace
+
+
+def run_lm(args):
+    from repro.configs import get_config, registry
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import api
+    from repro.models.config import InputShape
+    from repro.optim.optimizers import adam
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    mesh = make_smoke_mesh()
+    shape = InputShape("cli", args.seq, args.batch, "train")
+    bundle = api.build(cfg, mesh, shape)
+    mod = api._mod(cfg)
+    key = jax.random.key(args.seed)
+    params = mod.init_params(cfg, bundle.ctx, key)
+    opt = adam(cfg.lr)
+    opt_state = opt.init(params)
+
+    def batch_for(k):
+        b = {"tokens": jax.random.randint(k, (args.batch, args.seq), 0,
+                                          cfg.vocab_size)}
+        b["labels"] = b["tokens"]
+        if cfg.family == "encdec":
+            b["enc_embeds"] = jax.random.normal(
+                k, (args.batch, args.seq, cfg.d_model), jnp.bfloat16)
+        if cfg.modality == "vision":
+            b["patch_embeds"] = jax.random.normal(
+                k, (args.batch, args.seq // 8, cfg.d_model), jnp.bfloat16)
+        return b
+
+    for step in range(args.steps):
+        key, k = jax.random.split(key)
+        params, opt_state, m = bundle.fn(params, opt_state, batch_for(k))
+        if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['gnorm']):.3f}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task", choices=["mbrl", "lm"], default="mbrl")
+    # mbrl
+    ap.add_argument("--env", default="pendulum")
+    ap.add_argument("--algo", default="me-trpo",
+                    choices=["me-trpo", "me-ppo", "mb-mpo"])
+    ap.add_argument("--engine", default="async",
+                    choices=["async", "sequential", "partial-model",
+                             "partial-data"])
+    ap.add_argument("--mode", default="event", choices=["event", "threads"])
+    ap.add_argument("--trajs", type=int, default=40)
+    ap.add_argument("--n-models", type=int, default=5)
+    ap.add_argument("--model-hidden", type=int, default=128)
+    ap.add_argument("--policy-hidden", type=int, default=64)
+    ap.add_argument("--imagine-batch", type=int, default=64)
+    ap.add_argument("--imagine-horizon", type=int, default=40)
+    ap.add_argument("--collect-speed", type=float, default=1.0)
+    ap.add_argument("--ema-weight", type=float, default=0.9)
+    ap.add_argument("--no-early-stop", action="store_true")
+    ap.add_argument("--out", default=None)
+    # lm
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.task == "mbrl":
+        run_mbrl(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.mbrl.algos import AlgoConfig, MBMPO, MEAlgo, make_algo
+from repro.mbrl.dynamics import EnsembleConfig
+from repro.mbrl.early_stop import EMAEarlyStop
+from repro.mbrl.policy import PolicyConfig

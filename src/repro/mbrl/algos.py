@@ -1,0 +1,202 @@
+"""Model-based algorithm 'policy improvement steps' (Alg. 3, Step op).
+
+Each algorithm exposes::
+
+  init(key)                                   -> algo_state
+  improve(algo_state, model_params, key)      -> (algo_state, info)
+
+where ``improve`` is the MINIMAL unit of work the paper assigns to the
+policy-improvement worker: sample a batch of imaginary trajectories from
+the current dynamics model and take ONE policy-gradient (TRPO/PPO) step.
+
+* ME-TRPO  [10]: imagined rollouts from the ensemble -> TRPO step.
+* ME-PPO   [paper §5.1]: same, PPO clipped step.
+* MB-MPO   [4]: per-model inner VPG adaptation, outer PPO step on the
+  post-adaptation surrogate (meta-policy optimization).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.mbrl import dynamics as DYN
+from repro.mbrl import policy as PI
+from repro.mbrl import ppo as PPO
+from repro.mbrl import trpo as TRPO
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoConfig:
+    algo: str = "me-trpo"           # me-trpo | me-ppo | mb-mpo
+    imagine_batch: int = 64         # parallel imagined starts
+    imagine_horizon: int = 50
+    gamma: float = 0.99
+    max_kl: float = 0.01
+    ppo_lr: float = 3e-4
+    inner_lr: float = 0.05          # MB-MPO inner adaptation step size
+    n_models: int = 5
+
+
+def _imagined_batch(model_params, pol_params, s0, key, H, reward_fn):
+    traj = DYN.imagine_rollout(
+        model_params,
+        lambda p, s, k: PI.sample_action(p, s, k),
+        pol_params, s0, key, H, reward_fn)
+    # recompute pre-tanh actions' stats: we need pre-tanh acts for densities;
+    # re-sample pathwise with recorded states instead:
+    return traj
+
+
+def _rollout_with_logp(model_params, pol_params, s0, key, H, reward_fn,
+                       predict_fn=DYN.predict):
+    def step(carry, k):
+        s = carry
+        ka, kp = jax.random.split(k)
+        a, pre, lp = PI.sample_with_logp(pol_params, s, ka)
+        s2 = predict_fn(model_params, s, a, kp)
+        r = reward_fn(s, a, s2)
+        return s2, (s, pre, r)
+
+    _, (obs, pre, rew) = jax.lax.scan(step, s0, jax.random.split(key, H))
+    return obs, pre, rew
+
+
+def _flat_batch(obs, pre, rew, gamma):
+    rtg, adv = TRPO.compute_advantages(rew, gamma=gamma)
+    flat = lambda x: x.reshape((-1,) + x.shape[2:])
+    return {"obs": flat(obs), "act_pre": flat(pre), "adv": adv.reshape(-1)}
+
+
+class MEAlgo:
+    """ME-TRPO / ME-PPO policy improvement."""
+
+    def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
+                 init_state_fn, *, predict_fn=DYN.predict):
+        self.cfg = cfg
+        self.pol_cfg = pol_cfg
+        self.reward_fn = reward_fn
+        self.init_state_fn = init_state_fn  # key, n -> (n, obs_dim)
+        self.predict_fn = predict_fn        # swap in a world model here
+        if cfg.algo == "me-ppo":
+            self._ppo_opt, self._ppo_step = PPO.make_ppo_step(cfg.ppo_lr)
+        self._improve = jax.jit(self._improve_impl)
+
+    def init(self, key):
+        pol = PI.init_policy(self.pol_cfg, key)
+        state = {"policy": pol, "steps": jnp.zeros((), jnp.int32)}
+        if self.cfg.algo == "me-ppo":
+            state["opt"] = self._ppo_opt.init(pol)
+        return state
+
+    def _improve_impl(self, state, model_params, key):
+        cfg = self.cfg
+        k0, k1 = jax.random.split(key)
+        s0 = self.init_state_fn(k0, cfg.imagine_batch)
+        obs, pre, rew = _rollout_with_logp(
+            model_params, state["policy"], s0, k1, cfg.imagine_horizon,
+            self.reward_fn, self.predict_fn)
+        batch = _flat_batch(obs, pre, rew, cfg.gamma)
+        info = {"imagined_return": rew.sum(0).mean()}
+        if cfg.algo == "me-trpo":
+            new_pol, tinfo = TRPO.trpo_step(state["policy"], batch,
+                                            max_kl=cfg.max_kl)
+            info.update(tinfo)
+            new_state = {**state, "policy": new_pol,
+                         "steps": state["steps"] + 1}
+        else:
+            new_pol, opt, loss = self._ppo_step(
+                state["policy"], state["opt"], state["policy"], batch)
+            info["ppo_loss"] = loss
+            new_state = {**state, "policy": new_pol, "opt": opt,
+                         "steps": state["steps"] + 1}
+        return new_state, info
+
+    def improve(self, state, model_params, key):
+        return self._improve(state, model_params, key)
+
+
+class MBMPO:
+    """MB-MPO [4]: meta-policy optimization over the model ensemble.
+
+    Inner loop: for each ensemble member m, adapt theta with one VPG step
+    on imagined data from member m. Outer loop: PPO step on the
+    post-adaptation surrogate averaged over members."""
+
+    def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
+                 init_state_fn):
+        self.cfg = cfg
+        self.pol_cfg = pol_cfg
+        self.reward_fn = reward_fn
+        self.init_state_fn = init_state_fn
+        self._outer_opt = adam(cfg.ppo_lr)
+        self._improve = jax.jit(self._improve_impl)
+
+    def init(self, key):
+        pol = PI.init_policy(self.pol_cfg, key)
+        return {"policy": pol, "opt": self._outer_opt.init(pol),
+                "steps": jnp.zeros((), jnp.int32)}
+
+    def _member_params(self, model_params, m):
+        members = jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, m, 1, axis=0),
+            model_params["members"])
+        return {"members": members, "norm": model_params["norm"]}
+
+    def _vpg_loss(self, pol, member, s0, key):
+        obs, pre, rew = _rollout_with_logp(member, pol, s0, key,
+                                           self.cfg.imagine_horizon,
+                                           self.reward_fn)
+        batch = _flat_batch(obs, pre, rew, self.cfg.gamma)
+        lp = PI.log_prob(pol, batch["obs"], batch["act_pre"])
+        return -(lp * batch["adv"]).mean(), rew.sum(0).mean()
+
+    def _improve_impl(self, state, model_params, key):
+        cfg = self.cfg
+        pol = state["policy"]
+        K = cfg.n_models
+
+        def meta_loss(theta, key):
+            def per_member(m, k):
+                member = self._member_params(model_params, m)
+                k_in, k_out = jax.random.split(k)
+                s0 = self.init_state_fn(jax.random.fold_in(k_in, 7),
+                                        cfg.imagine_batch)
+                (l_in, _), g = jax.value_and_grad(
+                    self._vpg_loss, has_aux=True)(theta, member, s0, k_in)
+                adapted = jax.tree.map(lambda p, gg: p - cfg.inner_lr * gg,
+                                       theta, g)
+                s1 = self.init_state_fn(jax.random.fold_in(k_out, 11),
+                                        cfg.imagine_batch)
+                l_out, ret = self._vpg_loss(adapted, member, s1, k_out)
+                return l_out, ret
+
+            keys = jax.random.split(key, K)
+            losses, rets = jax.vmap(per_member)(jnp.arange(K), keys)
+            return losses.mean(), rets.mean()
+
+        (loss, ret), g = jax.value_and_grad(meta_loss, has_aux=True)(pol, key)
+        upd, opt = self._outer_opt.update(g, state["opt"], pol)
+        new_pol = apply_updates(pol, upd)
+        info = {"meta_loss": loss, "imagined_return": ret}
+        return ({"policy": new_pol, "opt": opt,
+                 "steps": state["steps"] + 1}, info)
+
+    def improve(self, state, model_params, key):
+        return self._improve(state, model_params, key)
+
+
+def make_algo(cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
+              init_state_fn, *, predict_fn=None):
+    if cfg.algo in ("me-trpo", "me-ppo"):
+        if predict_fn is not None:
+            return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn,
+                          predict_fn=predict_fn)
+        return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn)
+    if cfg.algo == "mb-mpo":
+        return MBMPO(cfg, pol_cfg, reward_fn, init_state_fn)
+    raise ValueError(cfg.algo)

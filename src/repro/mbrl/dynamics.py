@@ -1,0 +1,146 @@
+"""Dynamics-model ensembles (the paper's p-hat_phi_1..K).
+
+An ensemble of K MLPs trained on (s, a) -> delta-s with input/output
+normalisation; sampling uses a uniform prior over ensemble members
+(Section 3 of the paper). The batched per-member forward runs through the
+``ensemble_mlp`` kernel dispatcher (Pallas grouped matmul on TPU; pure-jnp
+reference elsewhere)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gmm import ops as gmm_ops
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class EnsembleConfig:
+    obs_dim: int
+    act_dim: int
+    hidden: int = 256
+    depth: int = 2
+    n_models: int = 5
+    lr: float = 1e-3
+    train_batch: int = 256
+    holdout_frac: float = 0.2
+
+
+def init_member(cfg: EnsembleConfig, key):
+    dims = [cfg.obs_dim + cfg.act_dim] + [cfg.hidden] * cfg.depth \
+        + [cfg.obs_dim]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [jax.random.normal(k, (a, b)) * (a ** -0.5)
+              for k, a, b in zip(ks, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,)) for b in dims[1:]],
+    }
+
+
+def init_ensemble(cfg: EnsembleConfig, key):
+    keys = jax.random.split(key, cfg.n_models)
+    params = jax.vmap(lambda k: init_member(cfg, k))(keys)
+    norm = {"mu_in": jnp.zeros(cfg.obs_dim + cfg.act_dim),
+            "sig_in": jnp.ones(cfg.obs_dim + cfg.act_dim),
+            "mu_out": jnp.zeros(cfg.obs_dim),
+            "sig_out": jnp.ones(cfg.obs_dim)}
+    return {"members": params, "norm": norm}
+
+
+def update_normalizer(state, obs, act, next_obs):
+    x = jnp.concatenate([obs, act], -1)
+    dy = next_obs - obs
+    norm = {
+        "mu_in": x.mean(0), "sig_in": x.std(0) + 1e-4,
+        "mu_out": dy.mean(0), "sig_out": dy.std(0) + 1e-4,
+    }
+    return {**state, "norm": norm}
+
+
+def member_forward(member, xn):
+    h = xn
+    n = len(member["w"])
+    for i, (w, b) in enumerate(zip(member["w"], member["b"])):
+        h = h @ w + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def ensemble_forward(params, obs, act):
+    """Per-member predictions. obs/act: (B, ·) -> (K, B, obs_dim)."""
+    x = jnp.concatenate([obs, act], -1)
+    n = params["norm"]
+    xn = (x - n["mu_in"]) / n["sig_in"]
+    dyn = gmm_ops.ensemble_mlp(params["members"], xn)
+    return obs[None] + dyn * n["sig_out"] + n["mu_out"]
+
+
+def predict(params, obs, act, key):
+    """Uniform-prior ensemble sample: s' ~ p_phi_I, I ~ U[K] (Sec. 3)."""
+    preds = ensemble_forward(params, obs, act)           # (K, B, D)
+    K = preds.shape[0]
+    idx = jax.random.randint(key, (obs.shape[0],), 0, K)
+    return jnp.take_along_axis(
+        preds, idx[None, :, None], axis=0)[0]
+
+
+def mse_loss(params, obs, act, next_obs):
+    n = params["norm"]
+    target = (next_obs - obs - n["mu_out"]) / n["sig_out"]
+    x = jnp.concatenate([obs, act], -1)
+    xn = (x - n["mu_in"]) / n["sig_in"]
+    pred = gmm_ops.ensemble_mlp(params["members"], xn)   # (K, B, D)
+    return jnp.mean((pred - target[None]) ** 2)
+
+
+def make_model_trainer(cfg: EnsembleConfig):
+    opt = adam(cfg.lr)
+
+    @jax.jit
+    def train_epoch(params, opt_state, obs, act, next_obs, key):
+        """One epoch of minibatch SGD over the (shuffled) buffer."""
+        n = obs.shape[0]
+        bs = min(cfg.train_batch, n)
+        nb = max(n // bs, 1)
+        perm = jax.random.permutation(key, n)[:nb * bs]
+        batches = perm.reshape(nb, bs)
+
+        def step(carry, idx):
+            p, o = carry
+            loss, g = jax.value_and_grad(mse_loss)(
+                p, obs[idx], act[idx], next_obs[idx])
+            upd, o = opt.update(g, o, p)
+            return (apply_updates(p, upd), o), loss
+
+        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
+                                                   batches)
+        return params, opt_state, losses.mean()
+
+    @jax.jit
+    def val_loss(params, obs, act, next_obs):
+        return mse_loss(params, obs, act, next_obs)
+
+    return opt, train_epoch, val_loss
+
+
+def imagine_rollout(params, policy_fn, policy_params, s0, key, horizon,
+                    reward_fn):
+    """Dyna imagination: roll the ensemble from s0 under the policy.
+
+    s0: (B, D). Returns dict with (H, B, ·) arrays."""
+
+    def step(carry, k):
+        s = carry
+        ka, kp = jax.random.split(k)
+        a = policy_fn(policy_params, s, ka)
+        s2 = predict(params, s, a, kp)
+        r = reward_fn(s, a, s2)
+        return s2, (s, a, r)
+
+    _, (obs, act, rew) = jax.lax.scan(step, s0,
+                                      jax.random.split(key, horizon))
+    return {"obs": obs, "act": act, "rew": rew}

@@ -1,0 +1,81 @@
+"""Model-free TRPO/PPO baselines (the paper's dotted lines in Figs. 2-3).
+
+On-policy: collect a batch of real trajectories per iteration, then take
+TRPO or several PPO steps. Virtual-time accounting matches the MBRL
+engines (collection = horizon * dt per trajectory)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.runtime import RunConfig, _Recorder
+from repro.mbrl import policy as PI
+from repro.mbrl import ppo as PPO
+from repro.mbrl import trpo as TRPO
+
+
+class ModelFreeTrainer:
+    def __init__(self, env, pol_cfg, run_cfg: RunConfig = RunConfig(), *,
+                 algo: str = "ppo", trajs_per_iter: int = 4,
+                 ppo_epochs: int = 10, gamma: float = 0.99):
+        self.env = env
+        self.rc = run_cfg
+        self.algo = algo
+        self.trajs_per_iter = trajs_per_iter
+        self.ppo_epochs = ppo_epochs
+        self.gamma = gamma
+        key = jax.random.key(run_cfg.seed)
+        self._key, k0, self._keval = jax.random.split(key, 3)
+        self.params = PI.init_policy(pol_cfg, k0)
+        if algo == "ppo":
+            self._opt, self._ppo_step = PPO.make_ppo_step()
+            self.opt_state = self._opt.init(self.params)
+        self.recorder = _Recorder(env, run_cfg.eval_rollouts)
+        self._collect = jax.jit(self._collect_impl)
+
+    def _collect_impl(self, params, key):
+        def one(k):
+            k0, k = jax.random.split(k)
+            s0 = self.env.reset(k0)
+
+            def step(s, kk):
+                a, pre, lp = PI.sample_with_logp(params, s, kk)
+                s2, r = self.env.step(s, a)
+                return s2, (s, pre, r)
+
+            _, (obs, pre, rew) = jax.lax.scan(
+                step, s0, jax.random.split(k, self.env.horizon))
+            return obs, pre, rew
+
+        obs, pre, rew = jax.vmap(one)(
+            jax.random.split(key, self.trajs_per_iter))
+        # (n, H, ·) -> (H, n, ·) for advantage computation
+        return (jnp.swapaxes(obs, 0, 1), jnp.swapaxes(pre, 0, 1),
+                jnp.swapaxes(rew, 0, 1))
+
+    def run(self):
+        rc = self.rc
+        t = 0.0
+        collected = 0
+        traj_t = self.env.horizon * self.env.dt
+        while collected < rc.total_trajs:
+            self._key, k = jax.random.split(self._key)
+            obs, pre, rew = self._collect(self.params, k)
+            collected += self.trajs_per_iter
+            t += traj_t * self.trajs_per_iter
+            _, adv = TRPO.compute_advantages(rew, gamma=self.gamma)
+            flat = lambda x: x.reshape((-1,) + x.shape[2:])
+            batch = {"obs": flat(obs), "act_pre": flat(pre),
+                     "adv": adv.reshape(-1)}
+            if self.algo == "trpo":
+                self.params, _ = TRPO.trpo_step(self.params, batch)
+                t += rc.policy_step_time
+            else:
+                old = jax.tree.map(lambda x: x, self.params)
+                for _ in range(self.ppo_epochs):
+                    self.params, self.opt_state, _ = self._ppo_step(
+                        self.params, self.opt_state, old, batch)
+                    t += rc.policy_step_time
+            self._keval, k2 = jax.random.split(self._keval)
+            self.recorder.record(t, collected, self.params, k2)
+        return self.recorder.trace

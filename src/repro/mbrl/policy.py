@@ -1,0 +1,78 @@
+"""Tanh-squashed Gaussian MLP policy (paper's pi_theta)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    obs_dim: int
+    act_dim: int
+    hidden: int = 64
+    depth: int = 2
+    init_log_std: float = -0.5
+
+
+def init_policy(cfg: PolicyConfig, key):
+    dims = [cfg.obs_dim] + [cfg.hidden] * cfg.depth + [cfg.act_dim]
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        "w": [jax.random.normal(k, (a, b)) * (a ** -0.5)
+              for k, a, b in zip(ks, dims[:-1], dims[1:])],
+        "b": [jnp.zeros((b,)) for b in dims[1:]],
+        "log_std": jnp.full((cfg.act_dim,), cfg.init_log_std),
+    }
+
+
+def mean_action(params, obs):
+    h = obs
+    n = len(params["w"])
+    for i, (w, b) in enumerate(zip(params["w"], params["b"])):
+        h = h @ w + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def sample_action(params, obs, key):
+    mu = mean_action(params, obs)
+    std = jnp.exp(params["log_std"])
+    return jnp.tanh(mu + std * jax.random.normal(key, mu.shape))
+
+
+def deterministic_action(params, obs, key=None):
+    return jnp.tanh(mean_action(params, obs))
+
+
+def log_prob(params, obs, act_pre_tanh):
+    """Gaussian log-prob of the PRE-tanh action (we store pre-tanh acts
+    during collection for exact densities)."""
+    mu = mean_action(params, obs)
+    log_std = params["log_std"]
+    z = (act_pre_tanh - mu) / jnp.exp(log_std)
+    return (-0.5 * z ** 2 - log_std - 0.5 * jnp.log(2 * jnp.pi)).sum(-1)
+
+
+def sample_with_logp(params, obs, key):
+    mu = mean_action(params, obs)
+    std = jnp.exp(params["log_std"])
+    pre = mu + std * jax.random.normal(key, mu.shape)
+    lp = log_prob(params, obs, pre)
+    return jnp.tanh(pre), pre, lp
+
+
+def kl_divergence(params_old, params_new, obs):
+    """KL(old || new) of the Gaussians (pre-tanh), averaged over obs."""
+    mu0 = mean_action(params_old, obs)
+    mu1 = mean_action(params_new, obs)
+    ls0, ls1 = params_old["log_std"], params_new["log_std"]
+    v0, v1 = jnp.exp(2 * ls0), jnp.exp(2 * ls1)
+    kl = (ls1 - ls0 + (v0 + (mu0 - mu1) ** 2) / (2 * v1) - 0.5).sum(-1)
+    return kl.mean()
+
+
+def entropy(params):
+    return (params["log_std"] + 0.5 * jnp.log(2 * jnp.pi * jnp.e)).sum()

@@ -1,0 +1,34 @@
+"""PPO (clipped surrogate) [27] — used by ME-PPO and as the model-free
+baseline; one jitted gradient step so the async policy worker's Step is
+the paper's minimal unit of work."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.mbrl import policy as PI
+from repro.optim.optimizers import adam, apply_updates
+
+
+def ppo_loss(params, params_old, batch, *, clip=0.2, ent_coef=0.0):
+    lp = PI.log_prob(params, batch["obs"], batch["act_pre"])
+    lp_old = PI.log_prob(params_old, batch["obs"], batch["act_pre"])
+    ratio = jnp.exp(lp - lp_old)
+    adv = batch["adv"]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - clip, 1 + clip) * adv
+    pg = -jnp.minimum(unclipped, clipped).mean()
+    return pg - ent_coef * PI.entropy(params)
+
+
+def make_ppo_step(lr=3e-4, clip=0.2, ent_coef=0.0):
+    opt = adam(lr)
+
+    @jax.jit
+    def step(params, opt_state, params_old, batch):
+        loss, g = jax.value_and_grad(ppo_loss)(params, params_old, batch,
+                                               clip=clip, ent_coef=ent_coef)
+        upd, opt_state = opt.update(g, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    return opt, step

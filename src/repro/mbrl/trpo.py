@@ -1,0 +1,99 @@
+"""TRPO: conjugate-gradient natural step + KL line search [Schulman 15].
+
+Operates on imagined (model) or real batches: dict with obs (N, D),
+act_pre (N, A), adv (N,), plus old params for the ratio."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.mbrl import policy as PI
+from repro.utils.tree import tree_add, tree_dot, tree_scale, tree_zeros_like
+
+
+def surrogate(params, params_old, batch):
+    lp = PI.log_prob(params, batch["obs"], batch["act_pre"])
+    lp_old = PI.log_prob(params_old, batch["obs"], batch["act_pre"])
+    ratio = jnp.exp(lp - lp_old)
+    return (ratio * batch["adv"]).mean()
+
+
+def _cg(hvp, g, iters=10, damping=1e-2):
+    x = tree_zeros_like(g)
+    r = g
+    p = g
+    rs = tree_dot(r, r)
+
+    def body(carry, _):
+        x, r, p, rs = carry
+        hp = tree_add(hvp(p), tree_scale(p, damping))
+        alpha = rs / (tree_dot(p, hp) + 1e-10)
+        x = tree_add(x, tree_scale(p, alpha))
+        r = tree_add(r, tree_scale(hp, -alpha))
+        rs_new = tree_dot(r, r)
+        p = tree_add(r, tree_scale(p, rs_new / (rs + 1e-10)))
+        return (x, r, p, rs_new), None
+
+    (x, *_), _ = jax.lax.scan(body, (x, r, p, rs), None, length=iters)
+    return x
+
+
+def trpo_step(params, batch, *, max_kl=0.01, cg_iters=10, backtrack=10,
+              backtrack_coef=0.8):
+    """One TRPO update. Returns (new_params, info)."""
+    params_old = jax.tree.map(lambda x: x, params)
+    g = jax.grad(surrogate)(params, params_old, batch)
+
+    def kl_fn(p):
+        return PI.kl_divergence(params_old, p, batch["obs"])
+
+    def hvp(v):
+        return jax.jvp(jax.grad(kl_fn), (params,), (v,))[1]
+
+    step_dir = _cg(hvp, g, iters=cg_iters)
+    shs = tree_dot(step_dir, hvp(step_dir))
+    lm = jnp.sqrt(jnp.maximum(shs, 1e-10) / (2 * max_kl))
+    full_step = tree_scale(step_dir, 1.0 / jnp.maximum(lm, 1e-10))
+    expected = tree_dot(g, full_step)
+
+    def try_step(frac):
+        cand = tree_add(params, tree_scale(full_step, frac))
+        s = surrogate(cand, params_old, batch)
+        kl = kl_fn(cand)
+        ok = (kl <= max_kl * 1.5) & (s > 0)
+        return cand, ok, s, kl
+
+    def body(carry, frac):
+        best, found = carry
+        cand, ok, s, kl = try_step(frac)
+        take = ok & (~found)
+        best = jax.tree.map(lambda b, c: jnp.where(take, c, b), best, cand)
+        return (best, found | ok), (s, kl)
+
+    fracs = backtrack_coef ** jnp.arange(backtrack)
+    (new_params, found), (ss, kls) = jax.lax.scan(body, (params, False),
+                                                  fracs)
+    info = {"found": found, "surrogate": ss[0], "kl": kls[0],
+            "expected_improve": expected}
+    return new_params, info
+
+
+def compute_advantages(rews, gamma=0.99, lam=0.97, values=None):
+    """Discounted reward-to-go baseline-centred advantages.
+    rews: (H, B). Without a value net, uses return-to-go minus its
+    per-timestep batch mean (the ME-TRPO [10] setup uses a linear baseline;
+    the batch-mean baseline is the variance-reduction workhorse here)."""
+    H = rews.shape[0]
+
+    def body(carry, r):
+        g = r + gamma * carry
+        return g, g
+
+    _, rtg = jax.lax.scan(body, jnp.zeros_like(rews[0]), rews[::-1])
+    rtg = rtg[::-1]                       # (H, B)
+    adv = rtg - rtg.mean(axis=1, keepdims=True)
+    adv = (adv - adv.mean()) / (adv.std() + 1e-8)
+    return rtg, adv

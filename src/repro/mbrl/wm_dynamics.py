@@ -1,0 +1,186 @@
+"""Transformer world-model dynamics (the scaled path of DESIGN.md §3).
+
+The same ``predict(params, obs, act, key)`` contract as the MLP ensemble
+(`mbrl.dynamics`), but backed by a token-level decoder LM from the models/
+stack: transitions are discretised with ``data.trajectory_tokens``-style
+binning into sequences ``[obs tokens | act tokens | next-obs tokens]``;
+training is teacher-forced next-token prediction with the loss masked to
+the next-obs region; imagination decodes the next-obs tokens greedily.
+
+Because the envs are Markov, conditioning on a single (s, a) is exact —
+each imagination step is one prefill(d+a tokens) + d greedy decodes, i.e.
+literally the `prefill`/`decode` serve steps the production dry-run lowers
+at (32, 32768) / (128, 32768). The policy-improvement worker is agnostic:
+``MEAlgo(..., predict_fn=wm.predict_fn)`` swaps the ensemble for the world
+model with no other change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.models.config import ModelConfig, ShardCtx
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclasses.dataclass(frozen=True)
+class WMConfig:
+    obs_dim: int
+    act_dim: int
+    bins: int = 33
+    d_model: int = 128
+    num_layers: int = 2
+    num_heads: int = 4
+    lr: float = 1e-3
+
+
+class WorldModelDynamics:
+    def __init__(self, cfg: WMConfig, key):
+        self.cfg = cfg
+        d, a = cfg.obs_dim, cfg.act_dim
+        vocab = cfg.bins * (d + a + d)   # per-position offsets, no aliasing
+        self.mcfg = ModelConfig(
+            name="wm", family="dense", num_layers=cfg.num_layers,
+            d_model=cfg.d_model, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_heads, d_ff=cfg.d_model * 4,
+            vocab_size=vocab, lr=cfg.lr)
+        self.ctx = ShardCtx()            # single-device path (no shard_map)
+        self.seq = 2 * d + a
+        self.params = LM.init_params(self.mcfg, self.ctx, key)
+        self._opt = adam(cfg.lr)
+        self.opt_state = self._opt.init(self.params)
+        # normalisation bounds (updated from data)
+        self.norm = {"lo": jnp.full((d,), -1.0), "hi": jnp.full((d,), 1.0)}
+        self._train_step = jax.jit(self._train_step_impl)
+        self._predict = jax.jit(self._predict_impl)
+
+    # ------------------------------------------------------------ tokens
+    def _tok_obs(self, obs, offset_block):
+        cfg = self.cfg
+        lo, hi = self.norm["lo"], self.norm["hi"]
+        b = jnp.clip(((obs - lo) / jnp.maximum(hi - lo, 1e-6)
+                      * (cfg.bins - 1)).astype(jnp.int32), 0, cfg.bins - 1)
+        off = (offset_block + jnp.arange(cfg.obs_dim)) * cfg.bins
+        return b + off
+
+    def _tok_act(self, act):
+        cfg = self.cfg
+        b = jnp.clip(((jnp.clip(act, -1, 1) + 1) / 2
+                      * (cfg.bins - 1)).astype(jnp.int32), 0, cfg.bins - 1)
+        off = (cfg.obs_dim + jnp.arange(cfg.act_dim)) * cfg.bins
+        return b + off
+
+    def _detok_obs(self, toks, offset_block):
+        cfg = self.cfg
+        lo, hi = self.norm["lo"], self.norm["hi"]
+        off = (offset_block + jnp.arange(cfg.obs_dim)) * cfg.bins
+        b = jnp.clip(toks - off, 0, cfg.bins - 1).astype(jnp.float32)
+        return lo + b / (cfg.bins - 1) * (hi - lo)
+
+    def update_normalizer(self, obs):
+        self.norm = {"lo": obs.min(0) - 1e-3, "hi": obs.max(0) + 1e-3}
+
+    # ------------------------------------------------------------- train
+    def _train_step_impl(self, params, opt_state, norm, obs, act, next_obs):
+        self_norm = self.norm
+        object.__setattr__  # no-op: norm passed explicitly below
+        d, a = self.cfg.obs_dim, self.cfg.act_dim
+
+        def tok_batch(norm):
+            lo, hi = norm["lo"], norm["hi"]
+            def tobs(o, block):
+                b = jnp.clip(((o - lo) / jnp.maximum(hi - lo, 1e-6)
+                              * (self.cfg.bins - 1)).astype(jnp.int32),
+                             0, self.cfg.bins - 1)
+                off = (block + jnp.arange(d)) * self.cfg.bins
+                return b + off
+            tact = jnp.clip(((jnp.clip(act, -1, 1) + 1) / 2
+                             * (self.cfg.bins - 1)).astype(jnp.int32),
+                            0, self.cfg.bins - 1) \
+                + (d + jnp.arange(a)) * self.cfg.bins
+            toks = jnp.concatenate(
+                [tobs(obs, 0), tact, tobs(next_obs, d + a)], axis=1)
+            labels = jnp.concatenate(
+                [jnp.full((obs.shape[0], d + a), -1, jnp.int32),
+                 toks[:, d + a:]], axis=1)
+            # next-token objective: shift labels left by one
+            labels = jnp.concatenate(
+                [labels[:, 1:], jnp.full((obs.shape[0], 1), -1, jnp.int32)],
+                axis=1)
+            return {"tokens": toks, "labels": labels}
+
+        batch = tok_batch(norm)
+
+        def loss_fn(p):
+            s, c, aux = LM.loss_forward(self.mcfg, self.ctx, p, batch,
+                                        remat=False)
+            return s / jnp.maximum(c, 1)
+
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        upd, opt_state = self._opt.update(g, opt_state, params)
+        return apply_updates(params, upd), opt_state, loss
+
+    def train_epoch(self, obs, act, next_obs, key, batch_size: int = 256):
+        n = obs.shape[0]
+        bs = min(batch_size, n)
+        perm = jax.random.permutation(key, n)[:(n // bs) * bs].reshape(-1, bs)
+        loss = 0.0
+        for idx in perm:
+            self.params, self.opt_state, l = self._train_step(
+                self.params, self.opt_state, self.norm,
+                obs[idx], act[idx], next_obs[idx])
+            loss = float(l)
+        return loss
+
+    # ----------------------------------------------------------- predict
+    def _predict_impl(self, params, norm, obs, act, key):
+        d, a = self.cfg.obs_dim, self.cfg.act_dim
+        lo, hi = norm["lo"], norm["hi"]
+        B = obs.shape[0]
+        ob = jnp.clip(((obs - lo) / jnp.maximum(hi - lo, 1e-6)
+                       * (self.cfg.bins - 1)).astype(jnp.int32),
+                      0, self.cfg.bins - 1) \
+            + (jnp.arange(d) * self.cfg.bins)[None]
+        ab = jnp.clip(((jnp.clip(act, -1, 1) + 1) / 2
+                       * (self.cfg.bins - 1)).astype(jnp.int32),
+                      0, self.cfg.bins - 1) \
+            + ((d + jnp.arange(a)) * self.cfg.bins)[None]
+        prompt = jnp.concatenate([ob, ab], axis=1)        # (B, d+a)
+        prefill = LM.make_prefill(self.mcfg, self.ctx, B, self.seq)
+        decode = LM.make_decode(self.mcfg, self.ctx, B, self.seq)
+        logits, cache = prefill(params, {"tokens": prompt})
+        # pad the cache out to self.seq + 1 slots
+        mode_len = LM.init_cache(self.mcfg, self.ctx, B, self.seq,
+                                 prefilled=False)
+        pad = mode_len["k"].shape[2] - cache["k"].shape[2]
+        for kk in ("k", "v"):
+            cache[kk] = jnp.pad(cache[kk], ((0, 0), (0, 0), (0, pad),
+                                            (0, 0), (0, 0)))
+        cache["pos"] = jnp.pad(cache["pos"], (0, pad), constant_values=-1)
+
+        outs = []
+        for j in range(d):
+            off = (d + a + j) * self.cfg.bins
+            block = jax.lax.dynamic_slice_in_dim(logits, off, self.cfg.bins,
+                                                 axis=1)
+            tok_in_block = jnp.argmax(block, axis=-1)
+            tok = tok_in_block + off
+            outs.append(tok)
+            logits, cache = decode(params, cache, tok[:, None].astype(jnp.int32))
+        toks = jnp.stack(outs, axis=1)                    # (B, d)
+        offs = ((d + a + jnp.arange(d)) * self.cfg.bins)[None]
+        b = jnp.clip(toks - offs, 0, self.cfg.bins - 1).astype(jnp.float32)
+        return lo + b / (self.cfg.bins - 1) * (hi - lo)
+
+    def predict_fn(self):
+        """predict(params, obs, act, key) with the ensemble's contract."""
+        norm = self.norm
+        return lambda params, obs, act, key: self._predict(params, norm,
+                                                           obs, act, key)
+
+    def predict(self, obs, act, key):
+        return self._predict(self.params, self.norm, obs, act, key)

@@ -1,0 +1,210 @@
+"""Global entry points: shard_map + jit wrappers around the local steps.
+
+``build(cfg, mesh, shape)`` returns a ``StepBundle`` with the jitted global
+function plus abstract (ShapeDtypeStruct) inputs and NamedShardings — the
+dry-run lowers ``bundle.fn`` against ``bundle.abstract_args`` without ever
+allocating parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import encdec as E
+from repro.models import lm as LM
+from repro.models.config import InputShape, ModelConfig, ShardCtx
+from repro.optim.optimizers import adam
+
+
+def shard_ctx(mesh, *, fsdp: bool = False, rs_ag: bool = False,
+              save_collectives: bool = False, bf16_grad_reduce: bool = False,
+              remat_group: int = 0, ws_moe: bool = False,
+              seq_shard_decode: bool = False) -> ShardCtx:
+    names = tuple(mesh.axis_names)
+    assert "model" in names, names
+    dp_axes = tuple(n for n in names if n != "model")
+    dp_size = 1
+    for n in dp_axes:
+        dp_size *= mesh.shape[n]
+    tp_size = mesh.shape["model"]
+    fsdp_axis = "data" if (fsdp and "data" in dp_axes
+                           and mesh.shape["data"] > 1) else None
+    return ShardCtx(dp_axes=dp_axes, tp_axis="model", dp_size=dp_size,
+                    tp_size=tp_size, seq_shard_decode=seq_shard_decode,
+                    fsdp_axis=fsdp_axis,
+                    fsdp_size=mesh.shape["data"] if fsdp_axis else 1,
+                    rs_ag=rs_ag, save_collectives=save_collectives,
+                    bf16_grad_reduce=bf16_grad_reduce,
+                    remat_group=remat_group, ws_moe=ws_moe)
+
+
+def _dp_spec_axis(ctx: ShardCtx):
+    return tuple(ctx.dp_axes) if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, ctx: ShardCtx):
+    """Abstract batch + PartitionSpecs for train/prefill inputs."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_spec_axis(ctx) if B % ctx.dp_size == 0 and B >= ctx.dp_size \
+        else None
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    dt = jnp.dtype(cfg.dtype)
+    batch, specs = {}, {}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+        specs["enc_embeds"] = P(dp, None, None)
+        batch["tokens"] = tok
+        specs["tokens"] = P(dp, None)
+    elif cfg.modality == "vision":
+        n_patch = S // 8
+        batch["patch_embeds"] = jax.ShapeDtypeStruct((B, n_patch, cfg.d_model),
+                                                     dt)
+        specs["patch_embeds"] = P(dp, None, None)
+        batch["tokens"] = tok
+        specs["tokens"] = P(dp, None)
+    else:
+        batch["tokens"] = tok
+        specs["tokens"] = P(dp, None)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["labels"] = P(dp, None)
+    return batch, specs
+
+
+def pick_microbatches(cfg: ModelConfig, shape: InputShape, ctx: ShardCtx,
+                      target_tokens: int = 8192) -> int:
+    if shape.kind != "train":
+        return 1
+    if shape.microbatch:
+        return shape.microbatch
+    b_loc = max(shape.global_batch // ctx.dp_size, 1)
+    want = max(1, (b_loc * shape.seq_len) // target_tokens)
+    nm = 1
+    for cand in range(1, b_loc + 1):
+        if b_loc % cand == 0 and cand <= want:
+            nm = cand
+    return nm
+
+
+@dataclasses.dataclass
+class StepBundle:
+    kind: str
+    fn: Callable                    # jitted global step
+    abstract_args: Tuple[Any, ...]  # ShapeDtypeStructs (pytrees)
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    ctx: ShardCtx
+    cfg: ModelConfig
+    shape: InputShape
+    num_microbatches: int = 1
+
+
+def _shard_map(fn, mesh, in_specs, out_specs, check_vma=False):
+    """check_vma=True enables replication tracking, which turns psum
+    transposes into communication-free pbroadcasts (§Perf iteration 1)."""
+    try:
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    except TypeError:  # older kwarg name
+        from jax.experimental.shard_map import shard_map as _sm
+        return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=check_vma)
+
+
+def _ns(mesh, specs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _mod(cfg: ModelConfig):
+    return E if cfg.family == "encdec" else LM
+
+
+def build(cfg: ModelConfig, mesh, shape: InputShape, *, fsdp: bool = False,
+          microbatch_tokens: int = 8192, rs_ag: bool = False,
+          save_collectives: bool = False, bf16_grad_reduce: bool = False,
+          remat_group: int = 0, ws_moe: bool = False, zero1: bool = False,
+          kv_int8: bool = False,
+          check_vma: bool = False) -> StepBundle:
+    ctx = shard_ctx(mesh, fsdp=fsdp, rs_ag=rs_ag,
+                    save_collectives=save_collectives,
+                    bf16_grad_reduce=bf16_grad_reduce,
+                    remat_group=remat_group,
+                    ws_moe=ws_moe and shape.kind == "decode")
+    if kv_int8 and shape.kind in ("decode", "prefill") \
+            and cfg.family in ("dense", "vlm", "moe"):
+        import dataclasses as _dc
+        ctx = _dc.replace(ctx, kv_int8=True)
+    cfg.validate(ctx)
+    mod = _mod(cfg)
+    pspecs = mod.param_specs(cfg, ctx)
+    params_abs = jax.eval_shape(
+        lambda k: mod.init_params(cfg, ctx, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    B, S = shape.global_batch, shape.seq_len
+    dp = _dp_spec_axis(ctx) if B % ctx.dp_size == 0 and B >= ctx.dp_size \
+        else None
+
+    if shape.kind == "train":
+        nm = pick_microbatches(cfg, shape, ctx, microbatch_tokens)
+        opt = adam(cfg.lr)
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        zplan = None
+        mv_specs = pspecs
+        if zero1 and ctx.dp_size > 1:
+            zplan = LM.zero1_plan(cfg, ctx, pspecs, params_abs)
+            mv_specs = LM.zero1_opt_specs(cfg, ctx, pspecs, params_abs)
+        opt_specs = type(opt_abs)(step=P(), mu=mv_specs, nu=mv_specs)
+        batch_abs, bspecs = batch_struct(cfg, shape, ctx)
+        if cfg.family == "encdec":
+            loss_fwd = lambda p, b: E.loss_forward(cfg, ctx, p, b)
+            local = LM.make_train_step(cfg, ctx, opt, nm, loss_fwd=loss_fwd,
+                                       specs=pspecs, zero1=zplan)
+        else:
+            local = LM.make_train_step(cfg, ctx, opt, nm, specs=pspecs,
+                                       zero1=zplan)
+        in_specs = (pspecs, opt_specs, bspecs)
+        out_specs = (pspecs, opt_specs, {"loss": P(), "gnorm": P()})
+        gfn = _shard_map(local, mesh, in_specs, out_specs, check_vma)
+        fn = jax.jit(gfn, in_shardings=_ns(mesh, in_specs),
+                     out_shardings=_ns(mesh, out_specs), donate_argnums=(0, 1))
+        return StepBundle("train", fn, (params_abs, opt_abs, batch_abs),
+                          _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
+                          shape, nm)
+
+    if shape.kind == "prefill":
+        batch_abs, bspecs = batch_struct(cfg, shape, ctx)
+        local = mod.make_prefill(cfg, ctx, B, S)
+        cspecs = mod.cache_specs(cfg, ctx, B, S)
+        logits_spec = P(dp, None)
+        in_specs = (pspecs, bspecs)
+        out_specs = (logits_spec, cspecs)
+        gfn = _shard_map(local, mesh, in_specs, out_specs, check_vma)
+        fn = jax.jit(gfn, in_shardings=_ns(mesh, in_specs),
+                     out_shardings=_ns(mesh, out_specs))
+        return StepBundle("prefill", fn, (params_abs, batch_abs),
+                          _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
+                          shape)
+
+    # decode: ONE new token against a seq_len-deep cache
+    local = mod.make_decode(cfg, ctx, B, S)
+    cache_abs = jax.eval_shape(
+        functools.partial(mod.init_cache, cfg, ctx, B, S, prefilled=True))
+    cspecs = mod.cache_specs(cfg, ctx, B, S)
+    token_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tok_spec = P(dp, None)
+    logits_spec = P(dp, None)
+    in_specs = (pspecs, cspecs, tok_spec)
+    out_specs = (logits_spec, cspecs)
+    gfn = _shard_map(local, mesh, in_specs, out_specs, check_vma)
+    fn = jax.jit(gfn, in_shardings=_ns(mesh, in_specs),
+                 out_shardings=_ns(mesh, out_specs), donate_argnums=(1,))
+    return StepBundle("decode", fn, (params_abs, cache_abs, token_abs),
+                      _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
+                      shape)

@@ -1,0 +1,145 @@
+"""Model / sharding configuration dataclasses shared by every architecture."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static description of the mesh axes a step function runs under.
+
+    Everything is explicit (manual tensor-parallel inside shard_map); axis
+    sizes are static so local shapes are known at trace time. A 1x1 mesh
+    gives the single-device path used by smoke tests.
+    """
+    dp_axes: Tuple[str, ...] = ("data",)
+    tp_axis: str = "model"
+    dp_size: int = 1
+    tp_size: int = 1
+    seq_shard_decode: bool = False  # shard KV cache over dp on sequence dim
+    fsdp_axis: Optional[str] = None  # store big expert weights sharded here
+    fsdp_size: int = 1
+    rs_ag: bool = False              # reduce_scatter+all_gather row-parallel
+                                     # reductions (exact psum replacement)
+    save_collectives: bool = False   # remat policy keeps collective outputs
+    bf16_grad_reduce: bool = False   # backward dx psums carried in bf16
+    remat_group: int = 0             # two-level remat group size (0 = flat)
+    ws_moe: bool = False             # weight-stationary MoE (decode path)
+    kv_int8: bool = False            # int8-quantised KV cache (decode)
+
+    @property
+    def all_axes(self):
+        return self.dp_axes + (self.tp_axis,)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | ssm | hybrid | encdec
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // num_heads
+    # --- attention flavour
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    attn_window: int = 0           # 0 = full attention; >0 = sliding window
+    # --- MoE
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # --- SSM (Mamba-2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    attn_every: int = 0            # hybrid: shared attn block every k layers
+    # --- encoder/decoder
+    encoder_layers: int = 0
+    # --- modality frontend stub: "text" | "vision" | "audio"
+    modality: str = "text"
+    mlp_type: str = "swiglu"       # swiglu | gelu
+    dtype: str = "bfloat16"
+    # --- source citation (paper / model card this config reproduces)
+    source: str = ""
+    # --- training
+    max_grad_norm: float = 1.0
+    lr: float = 3e-4
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    def padded_heads(self, tp: int) -> int:
+        """q heads padded up so tp divides them (zero-output pad heads)."""
+        return math.ceil(self.num_heads / tp) * tp if tp > 1 else self.num_heads
+
+    def padded_vocab(self, tp: int) -> int:
+        mult = 128 * max(tp, 1)
+        return math.ceil(self.vocab_size / mult) * mult
+
+    def padded_ff(self, tp: int) -> int:
+        mult = max(tp, 1)
+        return math.ceil(self.d_ff / mult) * mult
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_ssm_family(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def validate(self, ctx: ShardCtx) -> None:
+        tp = ctx.tp_size
+        hp = self.padded_heads(tp)
+        assert hp % tp == 0
+        if self.family != "ssm" and self.num_kv_heads:
+            if self.num_kv_heads % tp != 0:
+                # replicated-kv path: every shard's q heads must map to ONE
+                # kv head (see layers.py) — verify statically here.
+                h_loc = hp // tp
+                g = hp // self.num_kv_heads if self.num_kv_heads else 1
+                for i in range(tp):
+                    lo, hi = i * h_loc, (i + 1) * h_loc - 1
+                    lo_kv = min(lo, self.num_heads - 1) // g
+                    hi_kv = min(hi, self.num_heads - 1) // g
+                    if lo_kv != hi_kv:
+                        raise ValueError(
+                            f"{self.name}: replicated-kv requires one kv head "
+                            f"per shard (shard {i} spans {lo_kv}..{hi_kv})")
+        if self.is_ssm_family and self.ssm_heads % tp != 0:
+            raise ValueError(f"{self.name}: ssm heads {self.ssm_heads} "
+                             f"not divisible by tp={tp}")
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+    microbatch: int = 0            # 0 -> auto
+
+
+TRAIN_4K = InputShape("train_4k", 4_096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32_768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524_288, 1, "decode")
+
+INPUT_SHAPES = {s.name: s for s in
+                (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}

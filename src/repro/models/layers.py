@@ -1,0 +1,546 @@
+"""Transformer building blocks with explicit (manual) tensor parallelism.
+
+Every forward function here is written to execute INSIDE ``jax.shard_map``
+over a mesh with axes ``ctx.dp_axes + (ctx.tp_axis,)``. Arrays arriving at
+these functions are the per-device *local* shards; cross-device reductions
+are explicit ``psum``/``all_gather`` calls. A 1x1 mesh gives the
+single-device path (collectives become no-ops), so smoke tests and the
+production dry-run share one code path.
+
+Parameter builders come in pairs: ``init_*`` produces GLOBAL parameter
+pytrees (used eagerly only for small configs; the dry-run calls them under
+``jax.eval_shape``), and ``spec_*`` produces the matching
+``PartitionSpec`` pytree consumed by shard_map's in_specs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+from jax import ad_checkpoint
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.config import ModelConfig, ShardCtx
+
+# --------------------------------------------------------------------------
+# helpers
+
+
+def psum_tp(x, ctx: ShardCtx):
+    return jax.lax.psum(x, ctx.tp_axis) if ctx.tp_size > 1 else x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _psum_bf16_bwd(x, axis):
+    return jax.lax.psum(x, axis)
+
+
+def _psum_bf16_fwd_rule(x, axis):
+    return jax.lax.psum(x, axis), None
+
+
+def _psum_bf16_bwd_rule(axis, _, ct):
+    # The backward dx reduction (Megatron's bwd all-reduce) carried in
+    # bf16: halves ICI bytes vs the default f32 cotangent (§Perf iter 4).
+    return (jax.lax.psum(ct.astype(jnp.bfloat16), axis).astype(ct.dtype),)
+
+
+_psum_bf16_bwd.defvjp(_psum_bf16_fwd_rule, _psum_bf16_bwd_rule)
+
+
+def reduce_tp(x, ctx: ShardCtx):
+    """Row-parallel output reduction over tp.
+
+    Baseline: all-reduce (psum). Options measured in §Perf:
+      ctx.rs_ag            — reduce_scatter+all_gather pair (exact psum;
+                             REFUTED: identical ICI bytes — see EXPERIMENTS)
+      ctx.bf16_grad_reduce — custom-vjp psum whose backward reduction is
+                             carried in bf16 (halves bwd dx bytes)
+      (forward output is tagged for the save-collectives remat policy.)
+    """
+    if ctx.tp_size <= 1:
+        return x
+    if getattr(ctx, "rs_ag", False) and x.shape[-1] % ctx.tp_size == 0:
+        s = jax.lax.psum_scatter(x, ctx.tp_axis, scatter_dimension=x.ndim - 1,
+                                 tiled=True)
+        out = jax.lax.all_gather(s, ctx.tp_axis, axis=x.ndim - 1, tiled=True)
+    elif getattr(ctx, "bf16_grad_reduce", False):
+        out = _psum_bf16_bwd(x, ctx.tp_axis)
+    else:
+        out = jax.lax.psum(x, ctx.tp_axis)
+    # tag so the remat policy can SAVE collective outputs instead of
+    # re-communicating them during the backward recompute (§Perf iter 3)
+    return ad_checkpoint.checkpoint_name(out, "tp_reduce")
+
+
+def pmax_tp(x, ctx: ShardCtx):
+    return jax.lax.pmax(x, ctx.tp_axis) if ctx.tp_size > 1 else x
+
+
+def psum_dp(x, ctx: ShardCtx):
+    return jax.lax.psum(x, ctx.dp_axes) if ctx.dp_size > 1 else x
+
+
+def tp_index(ctx: ShardCtx):
+    if ctx.tp_size == 1:
+        return jnp.zeros((), jnp.int32)
+    return jax.lax.axis_index(ctx.tp_axis)
+
+
+def dp_index(ctx: ShardCtx):
+    if ctx.dp_size == 1:
+        return jnp.zeros((), jnp.int32)
+    idx = jnp.zeros((), jnp.int32)
+    for ax in ctx.dp_axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _dense_init(key, shape, scale_dim, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (scale_dim ** -0.5)).astype(dtype)
+
+
+def matmul(x, w):
+    """bf16 matmul with f32 accumulation."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# local head bookkeeping
+
+
+def head_layout(cfg: ModelConfig, ctx: ShardCtx):
+    """Returns (H_pad, H_loc, kv_sharded, KV_loc)."""
+    hp = cfg.padded_heads(ctx.tp_size)
+    h_loc = hp // ctx.tp_size
+    kv_sharded = cfg.num_kv_heads % ctx.tp_size == 0
+    kv_loc = cfg.num_kv_heads // ctx.tp_size if kv_sharded else 1
+    return hp, h_loc, kv_sharded, kv_loc
+
+
+# --------------------------------------------------------------------------
+# attention block
+
+
+def init_attn(cfg: ModelConfig, ctx: ShardCtx, key) -> Dict[str, Any]:
+    hp = cfg.padded_heads(ctx.tp_size)
+    hd, d = cfg.hd, cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln": jnp.ones((d,), dt),
+        "wq": _dense_init(ks[0], (d, hp * hd), d, dt),
+        "wk": _dense_init(ks[1], (d, cfg.num_kv_heads * hd), d, dt),
+        "wv": _dense_init(ks[2], (d, cfg.num_kv_heads * hd), d, dt),
+        "wo": _dense_init(ks[3], (hp * hd, d), hp * hd, dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def spec_attn(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    tp = ctx.tp_axis
+    kv_sharded = cfg.num_kv_heads % ctx.tp_size == 0
+    kv = P(None, tp) if kv_sharded else P(None, None)
+    p = {"ln": P(None), "wq": P(None, tp), "wk": kv, "wv": kv,
+         "wo": P(tp, None)}
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def _qkv(cfg: ModelConfig, ctx: ShardCtx, p, h, positions):
+    """h: (B, S, d) -> q (B,S,H_loc,hd), k/v (B,S,KV_loc,hd), roped."""
+    hp, h_loc, kv_sharded, kv_loc = head_layout(cfg, ctx)
+    hd = cfg.hd
+    B, S, _ = h.shape
+    q = matmul(h, p["wq"]).reshape(B, S, h_loc, hd)
+    k = matmul(h, p["wk"]).reshape(B, S, -1, hd)
+    v = matmul(h, p["wv"]).reshape(B, S, -1, hd)
+    if not kv_sharded:
+        # replicated kv: pick the single kv head this shard's q heads use
+        g = hp // cfg.num_kv_heads
+        kv_head = (tp_index(ctx) * h_loc) // g
+        kv_head = jnp.minimum(kv_head, cfg.num_kv_heads - 1)
+        k = jax.lax.dynamic_slice_in_dim(k, kv_head, 1, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, kv_head, 1, axis=2)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(cfg: ModelConfig, ctx: ShardCtx, p, x, positions, *,
+                 causal: bool = True, return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B, S, d) local."""
+    h = rmsnorm(x, p["ln"])
+    q, k, v = _qkv(cfg, ctx, p, h, positions)
+    o = attn_ops.attention(q, k, v, causal=causal, window=cfg.attn_window)
+    B, S = x.shape[:2]
+    o = matmul(o.reshape(B, S, -1), p["wo"])
+    o = reduce_tp(o, ctx)
+    out = x + o
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def decode_mode(cfg: ModelConfig, ctx: ShardCtx, global_batch: int,
+                seq_len: int):
+    """Statically pick the KV-cache layout. Returns a dict of
+    {kind, seq_axes, batch_dp, s_cache} (see module docstring in lm.py).
+
+      kind "W": sliding-window ring cache, replicated over tp.
+      kind "A": kv heads sharded over tp (requires KV % tp == 0);
+                seq optionally sharded over dp when batch is not.
+      kind "B": seq sharded over tp (for KV < tp); q heads all-gathered;
+                flash-decode logsumexp combine over tp (and dp if seq-dp).
+    """
+    window = cfg.attn_window
+    batch_dp = global_batch % ctx.dp_size == 0 and global_batch >= ctx.dp_size
+    if window and window > 0:
+        s_cache = min(window, seq_len + 1)
+        return dict(kind="W", seq_axes=(), batch_dp=batch_dp, s_cache=s_cache)
+    seq_dp = not batch_dp
+    if cfg.num_kv_heads % ctx.tp_size == 0:
+        seq_axes = ctx.dp_axes if seq_dp else ()
+        kind = "A"
+    else:
+        seq_axes = (ctx.dp_axes + (ctx.tp_axis,)) if seq_dp \
+            else (ctx.tp_axis,)
+        kind = "B"
+    n = axes_size(ctx, seq_axes) if seq_axes else 1
+    s_cache = -((seq_len + 1) // -n) * n  # pad so the shards divide evenly
+    return dict(kind=kind, seq_axes=seq_axes, batch_dp=batch_dp,
+                s_cache=s_cache)
+
+
+# --------------------------------------------------------------------------
+# int8 KV quantisation (§Perf decode memory iteration): absmax per
+# (slot, head) vector; halves cache HBM traffic at decode.
+
+
+def kv_quantize(x):
+    """x: (..., hd) bf16 -> (int8 values, f32 scale[..., 1])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def kv_dequantize(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def axes_size(ctx: ShardCtx, axes) -> int:
+    n = 1
+    for ax in axes:
+        n *= ctx.tp_size if ax == ctx.tp_axis else 1
+    dp_in = [ax for ax in axes if ax != ctx.tp_axis]
+    if dp_in:
+        if tuple(dp_in) != tuple(ctx.dp_axes):
+            raise ValueError("seq_axes must use all dp axes or none")
+        n *= ctx.dp_size
+    return n
+
+
+def _axes_index(ctx: ShardCtx, axes):
+    idx = jnp.zeros((), jnp.int32)
+    for ax in axes:
+        idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+    return idx
+
+
+def attn_decode(cfg: ModelConfig, ctx: ShardCtx, p, x, k_cache, v_cache,
+                cache_pos, index, mode, k_scale=None, v_scale=None):
+    """Single-token decode under the layout in ``mode``.
+
+    x: (B_loc, 1, d); caches: (B_loc, S_loc, KV_loc, hd);
+    cache_pos: (S_loc,) global position per slot (-1 empty); index: scalar
+    number of tokens already in sequence. Returns (out, k, v, pos) — plus
+    (k_scale, v_scale) when the cache is int8-quantised (scales shaped
+    (B, S_loc, KV_loc, 1), ctx.kv_int8 / §Perf decode-memory iteration).
+    """
+    quant = k_scale is not None
+    B = x.shape[0]
+    kind = mode["kind"]
+    hp, h_loc, kv_sharded, kv_loc = head_layout(cfg, ctx)
+    h = rmsnorm(x, p["ln"])
+    hd = cfg.hd
+    q = matmul(h, p["wq"]).reshape(B, 1, h_loc, hd)
+    k = matmul(h, p["wk"]).reshape(B, 1, -1, hd)
+    v = matmul(h, p["wv"]).reshape(B, 1, -1, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, index[None], cfg.rope_theta)
+    k = rope(k, index[None], cfg.rope_theta)
+
+    S_loc = k_cache.shape[1]
+    window = cfg.attn_window
+    slot = index % S_loc if kind == "W" else index
+
+    # Cache-resident kv layout: kind A+replicated-wk needs the local slice;
+    # kinds W and B keep the FULL kv heads in the cache (replicated wk).
+    if kind == "A" and not kv_sharded:
+        g = hp // cfg.num_kv_heads
+        kvh = jnp.minimum((tp_index(ctx) * h_loc) // g, cfg.num_kv_heads - 1)
+        k = jax.lax.dynamic_slice_in_dim(k, kvh, 1, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, kvh, 1, axis=2)
+
+    if quant:
+        kq, ks = kv_quantize(k)
+        vq, vs = kv_quantize(v)
+    seq_axes = mode["seq_axes"]
+    if seq_axes:
+        start = _axes_index(ctx, seq_axes) * S_loc
+        local = slot - start
+        owns = (local >= 0) & (local < S_loc)
+        lc = jnp.clip(local, 0, S_loc - 1)
+        def upd(c, val, ax=1):
+            new_c = jax.lax.dynamic_update_slice_in_dim(c, val, lc, axis=ax)
+            return jnp.where(owns, new_c, c)
+        if quant:
+            k_cache, v_cache = upd(k_cache, kq), upd(v_cache, vq)
+            k_scale, v_scale = upd(k_scale, ks), upd(v_scale, vs)
+        else:
+            k_cache, v_cache = upd(k_cache, k), upd(v_cache, v)
+        cache_pos = jnp.where(owns, jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, index[None], lc, axis=0), cache_pos)
+    else:
+        if quant:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, slot,
+                                                          axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, slot,
+                                                          axis=1)
+            k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot,
+                                                          axis=1)
+            v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot,
+                                                          axis=1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot,
+                                                          axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot,
+                                                          axis=1)
+        cache_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, index[None], slot, axis=0)
+    if quant:
+        k_att = kv_dequantize(k_cache, k_scale, x.dtype)
+        v_att = kv_dequantize(v_cache, v_scale, x.dtype)
+    else:
+        k_att, v_att = k_cache, v_cache
+
+    valid = (cache_pos >= 0) & (cache_pos <= index)
+    if window and window > 0:
+        valid &= cache_pos > (index - window)
+
+    if kind == "B":
+        # all q heads attend each shard's seq chunk; combine across shards
+        q_full = q
+        if ctx.tp_size > 1:
+            q_full = jax.lax.all_gather(q, ctx.tp_axis, axis=2, tiled=True)
+        o_w, lse = _masked_decode(q_full[:, 0], k_att, v_att, valid)
+    elif kind == "W" and not kv_sharded:
+        # cache holds ALL kv heads; slice the one this shard's q heads use
+        g = hp // cfg.num_kv_heads
+        kvh = jnp.minimum((tp_index(ctx) * h_loc) // g, cfg.num_kv_heads - 1)
+        kc = jax.lax.dynamic_slice_in_dim(k_att, kvh, 1, axis=2)
+        vc = jax.lax.dynamic_slice_in_dim(v_att, kvh, 1, axis=2)
+        o_w, lse = _masked_decode(q[:, 0], kc, vc, valid)
+    else:
+        o_w, lse = _masked_decode(q[:, 0], k_att, v_att, valid)
+
+    if seq_axes:
+        m = jax.lax.pmax(lse, seq_axes)
+        w = jnp.exp(lse - m)
+        o_sum = jax.lax.psum(o_w * w[..., None], seq_axes)
+        d_sum = jax.lax.psum(w, seq_axes)
+        o = o_sum / jnp.maximum(d_sum[..., None], 1e-30)
+    else:
+        o = o_w
+
+    if kind == "B":
+        # slice back this shard's q heads for the row-parallel wo
+        o = jax.lax.dynamic_slice_in_dim(o, tp_index(ctx) * h_loc, h_loc,
+                                         axis=1)
+    o = matmul(o.reshape(B, 1, -1).astype(x.dtype), p["wo"])
+    o = psum_tp(o, ctx)
+    if quant:
+        return x + o, k_cache, v_cache, cache_pos, k_scale, v_scale
+    return x + o, k_cache, v_cache, cache_pos
+
+
+def _masked_decode(q, k_cache, v_cache, valid):
+    """q: (B, Hq, hd); caches (B, S, KV, hd); valid: (S,) bool.
+
+    Returns locally-normalised output and the local logsumexp.
+    """
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf,
+                   k_cache.astype(jnp.float32)) * (D ** -0.5)
+    s = jnp.where(valid[None, None, None], s, -1e30)
+    m = s.max(-1)
+    pexp = jnp.exp(s - m[..., None])
+    den = pexp.sum(-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", pexp, v_cache.astype(jnp.float32))
+    lse = m + jnp.log(jnp.maximum(den, 1e-30))
+    o = o / jnp.maximum(den[..., None], 1e-30)
+    return o.reshape(B, Hq, D), lse.reshape(B, Hq)
+
+
+# --------------------------------------------------------------------------
+# dense MLP (SwiGLU / GELU)
+
+
+def init_mlp(cfg: ModelConfig, ctx: ShardCtx, key):
+    d, f = cfg.d_model, cfg.padded_ff(ctx.tp_size)
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    p = {"ln": jnp.ones((d,), dt),
+         "w1": _dense_init(ks[0], (d, f), d, dt),
+         "w2": _dense_init(ks[1], (f, d), f, dt)}
+    if cfg.mlp_type == "swiglu":
+        p["w3"] = _dense_init(ks[2], (d, f), d, dt)
+    return p
+
+
+def spec_mlp(cfg: ModelConfig, ctx: ShardCtx):
+    tp = ctx.tp_axis
+    p = {"ln": P(None), "w1": P(None, tp), "w2": P(tp, None)}
+    if cfg.mlp_type == "swiglu":
+        p["w3"] = P(None, tp)
+    return p
+
+
+def mlp_forward(cfg: ModelConfig, ctx: ShardCtx, p, x):
+    h = rmsnorm(x, p["ln"])
+    a = matmul(h, p["w1"])
+    if cfg.mlp_type == "swiglu":
+        a = jax.nn.silu(a.astype(jnp.float32)).astype(x.dtype) * matmul(h, p["w3"])
+    else:
+        a = jax.nn.gelu(a.astype(jnp.float32)).astype(x.dtype)
+    o = matmul(a, p["w2"])
+    o = reduce_tp(o, ctx)
+    return x + o
+
+
+# --------------------------------------------------------------------------
+# embedding / unembedding / loss (vocab-sharded)
+
+
+def init_embed(cfg: ModelConfig, ctx: ShardCtx, key):
+    vp, d = cfg.padded_vocab(ctx.tp_size), cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    return {"table": _dense_init(k1, (vp, d), d, dt),
+            "head": _dense_init(k2, (d, vp), d, dt),
+            "ln_f": jnp.ones((d,), dt)}
+
+
+def spec_embed(cfg: ModelConfig, ctx: ShardCtx):
+    tp = ctx.tp_axis
+    return {"table": P(tp, None), "head": P(None, tp), "ln_f": P(None)}
+
+
+def embed_tokens(cfg: ModelConfig, ctx: ShardCtx, p, tokens):
+    """tokens: (B, S) int32 local batch. Vocab-sharded lookup + psum."""
+    v_loc = p["table"].shape[0]
+    offset = tp_index(ctx) * v_loc
+    local = tokens - offset
+    ok = (local >= 0) & (local < v_loc)
+    local = jnp.clip(local, 0, v_loc - 1)
+    e = jnp.take(p["table"], local, axis=0)
+    e = jnp.where(ok[..., None], e, 0)
+    return psum_tp(e, ctx)
+
+
+def lm_loss(cfg: ModelConfig, ctx: ShardCtx, p, h, labels, *,
+            chunk_tokens: int = 2048):
+    """Sharded-vocab softmax cross-entropy, chunked over tokens.
+
+    h: (B, S, d) local; labels: (B, S) int32 (-1 = ignore).
+    Returns (sum_loss_local, count_local) — caller psums over dp.
+    """
+    d = h.shape[-1]
+    h = rmsnorm(h, p["ln_f"])
+    T = h.shape[0] * h.shape[1]
+    hf = h.reshape(T, d)
+    lf = labels.reshape(T)
+    v_loc = p["head"].shape[1]
+    offset = tp_index(ctx) * v_loc
+    n_real_here = jnp.clip(cfg.vocab_size - offset, 0, v_loc)
+    col_valid = jnp.arange(v_loc) < n_real_here
+
+    chunk = min(chunk_tokens, T)
+    pad = (-T) % chunk
+    hf = jnp.pad(hf, ((0, pad), (0, 0)))
+    lf = jnp.pad(lf, (0, pad), constant_values=-1)
+    nch = hf.shape[0] // chunk
+
+    def per_chunk(args):
+        hc, lc = args
+        logits = jnp.dot(hc, p["head"],
+                         preferred_element_type=jnp.float32)
+        logits = jnp.where(col_valid[None, :], logits, -1e30)
+        # max-subtraction is gradient-free (standard logsumexp stabilisation);
+        # stop_gradient BEFORE the pmax so the collective sees a symbolic-zero
+        # tangent (pmax has no differentiation rule).
+        m = pmax_tp(jax.lax.stop_gradient(logits.max(-1)), ctx)
+        se = psum_tp(jnp.exp(logits - m[:, None]).sum(-1), ctx)
+        lse = m + jnp.log(jnp.maximum(se, 1e-30))
+        lab_loc = lc - offset
+        hit = (lab_loc >= 0) & (lab_loc < v_loc)
+        lab_logit = jnp.take_along_axis(
+            logits, jnp.clip(lab_loc, 0, v_loc - 1)[:, None], axis=1)[:, 0]
+        lab_logit = psum_tp(jnp.where(hit, lab_logit, 0.0), ctx)
+        keep = lc >= 0
+        loss = jnp.where(keep, lse - lab_logit, 0.0)
+        return loss.sum(), keep.sum()
+
+    losses, counts = jax.lax.map(
+        per_chunk, (hf.reshape(nch, chunk, d), lf.reshape(nch, chunk)))
+    return losses.sum(), counts.sum()
+
+
+def lm_logits_last(cfg: ModelConfig, ctx: ShardCtx, p, h_last):
+    """h_last: (B, d) -> full-vocab logits (B, V_pad) gathered over tp."""
+    h = rmsnorm(h_last, p["ln_f"])
+    logits = jnp.dot(h, p["head"], preferred_element_type=jnp.float32)
+    if ctx.tp_size > 1:
+        logits = jax.lax.all_gather(logits, ctx.tp_axis, axis=1, tiled=True)
+    return logits

@@ -1,0 +1,240 @@
+"""Mixture-of-Experts FFN with explicit TPU-pod sharding.
+
+Two strategies, chosen statically from the config/mesh:
+
+* ``ep`` (expert-parallel) — experts sharded over the ``model`` axis
+  (requires num_experts % tp == 0). Each device dispatches its LOCAL tokens
+  into capacity buffers for all experts, computes only its local experts,
+  and a single psum over ``model`` combines expert outputs. (The all-to-all
+  dispatch variant lives in ``moe_forward_a2a`` and is the §Perf
+  hillclimb alternative.)
+* ``tp`` (tensor-parallel experts) — for small expert counts (e.g. Mixtral
+  E=8 < tp=16): every device computes ALL experts but only a d_ff/tp slice,
+  combined by the same output psum.
+
+Either way the big expert weights can additionally be STORED sharded over
+the ``data`` axis (FSDP / ZeRO-3) and are all-gathered just-in-time inside
+the layer; autodiff turns that gather into the matching reduce-scatter.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShardCtx
+from repro.models.layers import (_dense_init, matmul, psum_tp, reduce_tp,
+                                 rmsnorm, tp_index)
+
+
+def moe_strategy(cfg: ModelConfig, ctx: ShardCtx) -> str:
+    return "ep" if cfg.num_experts % ctx.tp_size == 0 else "tp"
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = math.ceil(cfg.top_k * tokens / cfg.num_experts * cfg.capacity_factor)
+    return max(8, math.ceil(c / 8) * 8)
+
+
+def _fsdp_gather(w, ctx: ShardCtx, axis: int):
+    if ctx.fsdp_size > 1:
+        return jax.lax.all_gather(w, ctx.fsdp_axis, axis=axis, tiled=True)
+    return w
+
+
+def _expert_ff(cfg: ModelConfig) -> int:
+    return cfg.d_ff  # per-expert hidden size (already per-expert in configs)
+
+
+def init_moe(cfg: ModelConfig, ctx: ShardCtx, key) -> Dict[str, Any]:
+    d, f, e = cfg.d_model, _expert_ff(cfg), cfg.num_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "router": _dense_init(ks[0], (d, e), d, jnp.float32),
+        "we1": _dense_init(ks[1], (e, d, f), d, dt),
+        "we3": _dense_init(ks[2], (e, d, f), d, dt),
+        "we2": _dense_init(ks[3], (e, f, d), f, dt),
+    }
+
+
+def spec_moe(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    tp, fs = ctx.tp_axis, (ctx.fsdp_axis if ctx.fsdp_size > 1 else None)
+    if moe_strategy(cfg, ctx) == "ep":
+        return {"ln": P(None), "router": P(None, None),
+                "we1": P(tp, None, fs), "we3": P(tp, None, fs),
+                "we2": P(tp, fs, None)}
+    return {"ln": P(None), "router": P(None, None),
+            "we1": P(None, fs, tp), "we3": P(None, fs, tp),
+            "we2": P(None, tp, fs)}
+
+
+def _dispatch(cfg: ModelConfig, xt, idx, cap):
+    """Scatter tokens into per-expert capacity buffers.
+
+    xt: (T, d); idx: (T, k) expert choices. Returns
+    (buf (E, cap+1, d) — slot ``cap`` is the overflow bin, slots (T, k)).
+    """
+    T, d = xt.shape
+    E, k = cfg.num_experts, cfg.top_k
+    buf = jnp.zeros((E, cap + 1, d), xt.dtype)
+    counts = jnp.zeros((E,), jnp.int32)
+    slots = []
+    eye = jnp.arange(E, dtype=jnp.int32)
+    for j in range(k):
+        ej = idx[:, j]
+        oh = (ej[:, None] == eye[None, :]).astype(jnp.int32)      # (T, E)
+        within = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1        # (T,)
+        pos = jnp.take(counts, ej) + within
+        counts = counts + oh.sum(0)
+        slot = jnp.where(pos < cap, pos, cap)
+        buf = buf.at[ej, slot].set(xt)
+        slots.append(slot)
+    return buf, jnp.stack(slots, axis=1), counts
+
+
+def moe_forward_ws(cfg: ModelConfig, ctx: ShardCtx, p, x):
+    """Weight-stationary MoE for tiny token counts (decode, §Perf h3).
+
+    FSDP-stored expert weights are NEVER gathered (28GB/token for
+    qwen3-235B!); instead the handful of decode tokens are all-gathered
+    across the FSDP axis (~1MB), every device computes its (expert-shard x
+    f-slice) partial for the whole token group, and one small psum over
+    (tp, fsdp) combines. Falls back to the standard path when there is no
+    FSDP sharding."""
+    B, S, d = x.shape
+    T = B * S
+    h = rmsnorm(x, p["ln"]).reshape(T, d)
+    fs_ax, fs = ctx.fsdp_axis, ctx.fsdp_size
+    hg = jax.lax.all_gather(h, fs_ax, axis=0, tiled=True)    # (T*fs, d)
+    Tg = hg.shape[0]
+    E, k = cfg.num_experts, cfg.top_k
+    logits = jnp.dot(hg, p["router"].astype(hg.dtype),
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    cap = capacity(cfg, Tg)
+    buf, slots, counts = _dispatch(cfg, hg, idx, cap)
+    if moe_strategy(cfg, ctx) == "ep":
+        e_loc = E // ctx.tp_size
+        off = tp_index(ctx) * e_loc
+        local = jax.lax.dynamic_slice_in_dim(buf, off, e_loc, axis=0)
+        w1, w3, w2 = p["we1"], p["we3"], p["we2"]   # LOCAL f-slices, no gather
+        a = jnp.einsum("ecd,edf->ecf", local, w1,
+                       preferred_element_type=jnp.float32)
+        g = jnp.einsum("ecd,edf->ecf", local, w3,
+                       preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(a) * g).astype(x.dtype)
+        out_loc = jnp.einsum("ecf,efd->ecd", hh, w2,
+                             preferred_element_type=jnp.float32)
+        out_full = jnp.zeros((E, cap + 1, d), jnp.float32)
+        out_full = jax.lax.dynamic_update_slice_in_dim(
+            out_full, out_loc, off, axis=0)
+    else:
+        # tp-expert strategy: we1 (E, d/fs, f/tp), we2 (E, f/tp, d/fs).
+        # Slice the tokens' d dim to this shard's fsdp slice; the first
+        # matmul is then PARTIAL over d and must be psum'd over fsdp
+        # before the nonlinearity.
+        d_loc = p["we1"].shape[1]
+        doff = jax.lax.axis_index(fs_ax) * d_loc
+        buf_d = jax.lax.dynamic_slice_in_dim(buf, doff, d_loc, axis=2)
+        a = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf_d, p["we1"],
+                                    preferred_element_type=jnp.float32),
+                         fs_ax)
+        g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", buf_d, p["we3"],
+                                    preferred_element_type=jnp.float32),
+                         fs_ax)
+        hh = (jax.nn.silu(a) * g).astype(x.dtype)
+        out_d = jnp.einsum("ecf,efd->ecd", hh, p["we2"],
+                           preferred_element_type=jnp.float32)
+        # out_d: (E, C, d_loc) partial over f (tp); psum over tp, then
+        # reassemble full d via all_gather over fsdp
+        out_d = jax.lax.psum(out_d, ctx.tp_axis)
+        out_full = jax.lax.all_gather(out_d, fs_ax, axis=2, tiled=True)
+        y = jnp.zeros((Tg, d), jnp.float32)
+        for j in range(k):
+            yj = out_full[idx[:, j], slots[:, j]]
+            keep = (slots[:, j] < cap).astype(jnp.float32)
+            y = y + w[:, j, None] * keep[:, None] * yj
+        start = jax.lax.axis_index(fs_ax) * T
+        y = jax.lax.dynamic_slice_in_dim(y, start, T, axis=0)
+        return (x + y.reshape(B, S, d).astype(x.dtype),
+                jnp.zeros((), jnp.float32))
+    y = jnp.zeros((Tg, d), jnp.float32)
+    for j in range(k):
+        yj = out_full[idx[:, j], slots[:, j]]
+        keep = (slots[:, j] < cap).astype(jnp.float32)
+        y = y + w[:, j, None] * keep[:, None] * yj
+    # combine partial f-slices (fsdp) and expert shards (tp) in one psum,
+    # then take back this shard's own tokens
+    y = jax.lax.psum(y, (ctx.tp_axis, fs_ax))
+    start = jax.lax.axis_index(fs_ax) * T
+    y = jax.lax.dynamic_slice_in_dim(y, start, T, axis=0)
+    return x + y.reshape(B, S, d).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def moe_forward(cfg: ModelConfig, ctx: ShardCtx, p, x):
+    """x: (B, S, d) local. Returns (x + moe(x), aux_loss)."""
+    if getattr(ctx, "ws_moe", False) and ctx.fsdp_size > 1:
+        return moe_forward_ws(cfg, ctx, p, x)
+    B, S, d = x.shape
+    T = B * S
+    h = rmsnorm(x, p["ln"]).reshape(T, d)
+    E, k = cfg.num_experts, cfg.top_k
+    logits = jnp.dot(h, p["router"].astype(h.dtype),
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    w, idx = jax.lax.top_k(probs, k)                              # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    cap = capacity(cfg, T)
+    buf, slots, counts = _dispatch(cfg, h, idx, cap)
+
+    f = _expert_ff(cfg)
+    if moe_strategy(cfg, ctx) == "ep":
+        e_loc = E // ctx.tp_size
+        off = tp_index(ctx) * e_loc
+        local = jax.lax.dynamic_slice_in_dim(buf, off, e_loc, axis=0)
+        w1 = _fsdp_gather(p["we1"], ctx, axis=2)
+        w3 = _fsdp_gather(p["we3"], ctx, axis=2)
+        w2 = _fsdp_gather(p["we2"], ctx, axis=1)
+        a = jnp.einsum("ecd,edf->ecf", local, w1,
+                       preferred_element_type=jnp.float32)
+        g = jnp.einsum("ecd,edf->ecf", local, w3,
+                       preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(a) * g).astype(x.dtype)
+        out_loc = jnp.einsum("ecf,efd->ecd", hh, w2,
+                             preferred_element_type=jnp.float32)
+        out_full = jnp.zeros((E, cap + 1, d), jnp.float32)
+        out_full = jax.lax.dynamic_update_slice_in_dim(
+            out_full, out_loc, off, axis=0)
+    else:  # tp-sharded experts (f split over model axis)
+        w1 = _fsdp_gather(p["we1"], ctx, axis=1)
+        w3 = _fsdp_gather(p["we3"], ctx, axis=1)
+        w2 = _fsdp_gather(p["we2"], ctx, axis=2)
+        a = jnp.einsum("ecd,edf->ecf", buf, w1,
+                       preferred_element_type=jnp.float32)
+        g = jnp.einsum("ecd,edf->ecf", buf, w3,
+                       preferred_element_type=jnp.float32)
+        hh = (jax.nn.silu(a) * g).astype(x.dtype)
+        out_full = jnp.einsum("ecf,efd->ecd", hh, w2,
+                              preferred_element_type=jnp.float32)
+
+    y = jnp.zeros((T, d), jnp.float32)
+    for j in range(k):
+        yj = out_full[idx[:, j], slots[:, j]]                     # (T, d)
+        keep = (slots[:, j] < cap).astype(jnp.float32)
+        y = y + w[:, j, None] * keep[:, None] * yj
+    # combine in bf16: halves the EP psum bytes and the saved residual
+    y = reduce_tp(y.astype(x.dtype), ctx)
+
+    # Switch-style load-balance auxiliary loss (local tokens)
+    frac = counts.astype(jnp.float32) / jnp.maximum(T * k, 1)
+    imp = probs.mean(0)
+    aux = E * jnp.sum(frac * imp)
+    return x + y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,163 @@
+"""Mamba-2 (SSD) block with head-sharded tensor parallelism.
+
+Heads (d_inner / head_dim of them) are sharded over the ``model`` axis; the
+B/C group projections (ngroups=1) are replicated so every shard can run its
+heads independently; the output projection is row-parallel with a psum.
+The gated RMSNorm normalises over the GLOBAL d_inner via a scalar psum so
+the sharded computation is bit-identical to the unsharded one.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.config import ModelConfig, ShardCtx
+from repro.models.layers import _dense_init, matmul, psum_tp, reduce_tp
+
+# conv channels = [x (d_inner, sharded)] + [B,C (2*G*N, replicated)]
+
+
+def init_mamba(cfg: ModelConfig, ctx: ShardCtx, key) -> Dict[str, Any]:
+    d, di = cfg.d_model, cfg.d_inner
+    H, G, N, w = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.ones((d,), dt),
+        "wz": _dense_init(ks[0], (d, di), d, dt),
+        "wx": _dense_init(ks[1], (d, di), d, dt),
+        "wbc": _dense_init(ks[2], (d, 2 * G * N), d, dt),
+        "wdt": _dense_init(ks[3], (d, H), d, dt),
+        "conv_x": _dense_init(ks[4], (w, di), w, dt),
+        "conv_bc": _dense_init(ks[5], (w, 2 * G * N), w, dt),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_bbc": jnp.zeros((2 * G * N,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gn": jnp.ones((di,), dt),
+        "wo": _dense_init(ks[0], (di, d), di, dt),
+    }
+
+
+def spec_mamba(cfg: ModelConfig, ctx: ShardCtx) -> Dict[str, Any]:
+    tp = ctx.tp_axis
+    return {
+        "ln": P(None), "wz": P(None, tp), "wx": P(None, tp),
+        "wbc": P(None, None), "wdt": P(None, tp),
+        "conv_x": P(None, tp), "conv_bc": P(None, None),
+        "conv_bx": P(tp), "conv_bbc": P(None),
+        "A_log": P(tp), "D": P(tp), "dt_bias": P(tp),
+        "gn": P(tp), "wo": P(tp, None),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); b: (C,)."""
+    W = w.shape[0]
+    xf = x.astype(jnp.float32)
+    y = xf * w[-1].astype(jnp.float32)
+    for i in range(W - 1):
+        shift = W - 1 - i
+        y = y + jnp.pad(xf, ((0, 0), (shift, 0), (0, 0)))[:, :-shift] \
+            * w[i].astype(jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _gated_norm(y, z, w, ctx: ShardCtx, di_global: int, eps: float = 1e-5):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ss = psum_tp((yf * yf).sum(-1), ctx) / di_global
+    return (yf * jax.lax.rsqrt(ss + eps)[..., None]
+            * w.astype(jnp.float32)).astype(y.dtype)
+
+
+def _project(cfg, ctx, p, h):
+    z = matmul(h, p["wz"])
+    xin = matmul(h, p["wx"])
+    bc = matmul(h, p["wbc"])
+    dt = matmul(h, p["wdt"]).astype(jnp.float32)
+    return z, xin, bc, dt
+
+
+def mamba_forward(cfg: ModelConfig, ctx: ShardCtx, p, x, *,
+                  return_state: bool = False, initial_state=None):
+    """x: (B, S, d) local. Optional state passthrough for prefill."""
+    B, S, d = x.shape
+    G, N, Pd = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim
+    H_loc = cfg.ssm_heads // ctx.tp_size
+    hn = _rms(x, p["ln"])
+    z, xin, bc, dt = _project(cfg, ctx, p, hn)
+    # pre-conv tails become the decode-time conv state (x part is
+    # tp-sharded, bc part replicated — kept as separate cache entries)
+    W = cfg.ssm_conv - 1
+    pad_s = max(W - S, 0)
+    tail_x = jnp.pad(xin, ((0, 0), (pad_s, 0), (0, 0)))[:, -W:]
+    tail_bc = jnp.pad(bc, ((0, 0), (pad_s, 0), (0, 0)))[:, -W:]
+    xin = jax.nn.silu(
+        _causal_conv(xin, p["conv_x"], p["conv_bx"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    bc = jax.nn.silu(
+        _causal_conv(bc, p["conv_bc"], p["conv_bbc"]).astype(jnp.float32)
+    ).astype(x.dtype)
+    B_, C_ = bc[..., :G * N].reshape(B, S, G, N), \
+        bc[..., G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xin.reshape(B, S, H_loc, Pd)
+    res = ssd_ops.ssd(xh, dt, A, B_, C_, chunk=cfg.ssm_chunk,
+                      initial_state=initial_state,
+                      return_final_state=return_state)
+    y, final_state = res if return_state else (res, None)
+    y = (y.astype(jnp.float32)
+         + p["D"].astype(jnp.float32)[None, None, :, None]
+         * xh.astype(jnp.float32)).astype(x.dtype)
+    y = _gated_norm(y.reshape(B, S, -1), z, p["gn"], ctx, cfg.d_inner)
+    out = reduce_tp(matmul(y, p["wo"]), ctx)
+    out = x + out
+    if return_state:
+        return out, (final_state, tail_x, tail_bc)
+    return out
+
+
+def mamba_decode(cfg: ModelConfig, ctx: ShardCtx, p, x, ssm_state,
+                 conv_x_state, conv_bc_state):
+    """x: (B, 1, d); ssm_state: (B, H_loc, P, N);
+    conv_x_state: (B, W-1, di_loc); conv_bc_state: (B, W-1, 2GN)."""
+    B = x.shape[0]
+    G, N, Pd, W = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv
+    H_loc = cfg.ssm_heads // ctx.tp_size
+    hn = _rms(x, p["ln"])
+    z, xin, bc, dt = _project(cfg, ctx, p, hn)
+    win_x = jnp.concatenate([conv_x_state, xin], axis=1)   # (B, W, di_loc)
+    win_bc = jnp.concatenate([conv_bc_state, bc], axis=1)  # (B, W, 2GN)
+    new_conv_x, new_conv_bc = win_x[:, 1:], win_bc[:, 1:]
+    cx = (win_x.astype(jnp.float32)
+          * p["conv_x"].astype(jnp.float32)).sum(1) \
+        + p["conv_bx"].astype(jnp.float32)
+    cbc = (win_bc.astype(jnp.float32)
+           * p["conv_bc"].astype(jnp.float32)).sum(1) \
+        + p["conv_bbc"].astype(jnp.float32)
+    xin1 = jax.nn.silu(cx).astype(x.dtype)                 # (B, di_loc)
+    bc1 = jax.nn.silu(cbc).astype(x.dtype)                 # (B, 2GN)
+    B_t = bc1[:, :G * N].reshape(B, G, N)
+    C_t = bc1[:, G * N:].reshape(B, G, N)
+    dt1 = jax.nn.softplus(dt[:, 0] + p["dt_bias"])     # (B, H_loc)
+    A = -jnp.exp(p["A_log"])
+    y, new_ssm = ssd_ops.ssd_decode_step(
+        ssm_state, xin1.reshape(B, H_loc, Pd), dt1, A, B_t, C_t)
+    y = (y.astype(jnp.float32)
+         + p["D"].astype(jnp.float32)[None, :, None]
+         * xin1.reshape(B, H_loc, Pd).astype(jnp.float32)).astype(x.dtype)
+    y = _gated_norm(y.reshape(B, 1, -1), z, p["gn"], ctx, cfg.d_inner)
+    out = psum_tp(matmul(y, p["wo"]), ctx)
+    return x + out, new_ssm, new_conv_x, new_conv_bc
+
+
+def _rms(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

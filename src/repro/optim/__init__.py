@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (
+    Optimizer, adam, adamw, sgd, clip_by_global_norm,
+    cosine_schedule, warmup_cosine, constant_schedule,
+)

@@ -1,0 +1,4 @@
+from repro.utils.tree import (
+    tree_add, tree_scale, tree_zeros_like, tree_norm, tree_dot,
+    tree_size, tree_cast,
+)

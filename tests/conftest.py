@@ -1,0 +1,12 @@
+import warnings
+
+import jax
+import pytest
+
+warnings.filterwarnings("ignore", category=DeprecationWarning)
+
+
+@pytest.fixture(scope="session")
+def mesh1():
+    """Trivial 1x1 mesh — the single-device path of the manual-TP code."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,44 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_pytree, restore, save_pytree
+
+
+def make_tree(key):
+    return {"w": [jax.random.normal(key, (4, 3)),
+                  jnp.zeros((3,), jnp.bfloat16)],
+            "step": jnp.asarray(7, jnp.int32),
+            "nested": {"a": jnp.ones((2, 2))}}
+
+
+def test_roundtrip(tmp_path):
+    tree = make_tree(jax.random.key(0))
+    save_pytree(tmp_path / "ck", tree)
+    out = load_pytree(tmp_path / "ck", tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+
+
+def test_steps_and_retention(tmp_path):
+    tree = make_tree(jax.random.key(1))
+    for s in (10, 20, 30, 40):
+        save_pytree(tmp_path / "run", tree, step=s, keep=2)
+    assert latest_step(tmp_path / "run") == 40
+    out, step = restore(tmp_path / "run", tree)
+    assert step == 40
+    # retention: only 2 newest kept
+    steps = sorted(p.name for p in (tmp_path / "run").glob("step_*"))
+    assert len(steps) == 2
+
+
+def test_shape_mismatch_raises(tmp_path):
+    tree = make_tree(jax.random.key(2))
+    save_pytree(tmp_path / "ck", tree)
+    bad = dict(tree)
+    bad["w"] = [jnp.zeros((5, 3)), tree["w"][1]]
+    with pytest.raises(AssertionError):
+        load_pytree(tmp_path / "ck", bad)

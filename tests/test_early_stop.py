@@ -1,0 +1,58 @@
+"""EMA early stopping (paper §4 / §5.4, Fig. 5a)."""
+from hypothesis import given, settings, strategies as st
+
+from repro.mbrl.early_stop import EMAEarlyStop
+
+
+def test_stops_on_val_increase():
+    es = EMAEarlyStop(weight=0.9)
+    for v in (1.0, 0.9, 0.8):
+        assert not es.update(v)
+    assert es.update(5.0)          # val jumps above EMA -> stop
+    assert es.stopped
+
+
+def test_reset_on_new_data():
+    es = EMAEarlyStop(weight=0.9)
+    es.update(1.0)
+    es.update(5.0)
+    assert es.stopped
+    es.reset()                     # new samples arrive (Alg. 2)
+    assert not es.stopped
+    assert not es.update(10.0)     # first loss after reset never stops
+
+
+def test_disabled_never_stops():
+    es = EMAEarlyStop(weight=0.9, enabled=False)
+    for v in (1.0, 2.0, 4.0, 8.0):
+        es.update(v)
+    assert not es.stopped
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 0.95),
+       st.lists(st.floats(0.01, 10.0), min_size=2, max_size=30))
+def test_monotone_decreasing_never_stops(weight, losses):
+    """Property: strictly decreasing validation loss never triggers."""
+    losses = sorted(losses, reverse=True)
+    es = EMAEarlyStop(weight=weight)
+    for v in losses:
+        es.update(v)
+    assert not es.stopped
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.05, 0.9))
+def test_lower_weight_stops_sooner_or_equal(weight):
+    """Property (Fig. 5a): a LOWER ema weight is at least as aggressive on
+    a rebounding loss curve."""
+    curve = [3.0, 2.0, 1.0, 1.2, 1.4, 1.7, 2.2, 3.0]
+
+    def stop_index(w):
+        es = EMAEarlyStop(weight=w)
+        for i, v in enumerate(curve):
+            if es.update(v):
+                return i
+        return len(curve)
+
+    assert stop_index(weight) <= stop_index(min(weight + 0.09, 0.99))

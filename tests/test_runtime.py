@@ -1,0 +1,87 @@
+"""Async framework behaviour tests (the paper's core claims, miniaturised)."""
+import jax
+import pytest
+
+from repro.core import (AsyncTrainer, PartialAsyncDataPolicy,
+                        PartialAsyncModelPolicy, RunConfig,
+                        SequentialTrainer)
+from repro.envs import make_env
+from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
+
+
+def build(env, algo="me-trpo", n_models=2):
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=32, n_models=n_models)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=16)
+    acfg = AlgoConfig(algo=algo, imagine_batch=16, imagine_horizon=15,
+                      n_models=n_models)
+    return ens, make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+
+
+def test_async_faster_wallclock():
+    """Fig 2: async virtual run time ~= collection time << sequential."""
+    env = make_env("pendulum")
+    rc = RunConfig(total_trajs=6, seed=0)
+    ens, algo = build(env)
+    ta = AsyncTrainer(env, ens, algo, rc).run()
+    ens, algo = build(env)
+    ts = SequentialTrainer(env, ens, algo, rc).run()
+    t_async, t_seq = ta[-1]["time"], ts[-1]["time"]
+    collection_time = 6 * env.horizon * env.dt
+    assert t_async <= collection_time * 1.05, \
+        "async run time must collapse to sampling time"
+    assert t_seq > t_async * 1.5, (t_seq, t_async)
+
+
+def test_async_takes_many_policy_steps_per_traj():
+    """The async schedule gives the policy worker many steps per rollout
+    (removing the grad-steps-per-iteration hyperparameter, Sec. 4).
+    After the warmup dataset (min_warmup_trajs=4), the worker takes
+    ~traj_time/policy_step_time = 8 steps per collected trajectory."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    rc = RunConfig(total_trajs=8, seed=0)
+    tr = AsyncTrainer(env, ens, algo, rc)
+    tr.run()
+    post_warmup = tr.collector.collected - rc.min_warmup_trajs
+    assert tr.policy_worker.steps > 4 * post_warmup, \
+        (tr.policy_worker.steps, post_warmup)
+
+
+def test_partial_async_engines_run():
+    env = make_env("pendulum")
+    for eng in (PartialAsyncModelPolicy, PartialAsyncDataPolicy):
+        ens, algo = build(env)
+        trace = eng(env, ens, algo, RunConfig(total_trajs=6, seed=0)).run()
+        assert trace and trace[-1]["trajs"] >= 6
+
+
+def test_virtual_clock_speed_effect():
+    """Fig 5b mechanism: slower collection => more policy steps/sample."""
+    env = make_env("pendulum")
+    steps_per_traj = {}
+    for speed in (0.5, 2.0):
+        ens, algo = build(env)
+        tr = AsyncTrainer(env, ens, algo,
+                          RunConfig(total_trajs=5, seed=0,
+                                    collect_speed=speed))
+        tr.run()
+        steps_per_traj[speed] = tr.policy_worker.steps / tr.collector.collected
+    assert steps_per_traj[0.5] > steps_per_traj[2.0]
+
+
+def test_threads_mode_smoke():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=3, seed=0),
+                      mode="threads")
+    trace = tr.run()
+    assert tr.collector.collected >= 3
+    assert trace[-1]["trajs"] >= 3
+
+
+def test_stopping_criterion_total_trajs():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=1))
+    tr.run()
+    assert tr.collector.collected == 4
