@@ -1,0 +1,23 @@
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+export PYTHONPATH
+
+.PHONY: test test-green bench bench-hotpath
+
+# tier-1 verify, verbatim from ROADMAP.md (-x stops at the first of the
+# known pre-existing failures in test_arch_smoke/test_dryrun_small)
+test:
+	python -m pytest -x -q
+
+# the currently-green suite: everything except the two modules with
+# known pre-existing jax-version failures — use this to check a change
+test-green:
+	python -m pytest -q --ignore=tests/test_arch_smoke.py \
+		--ignore=tests/test_dryrun_small.py
+
+bench:
+	python -m benchmarks.run
+
+# Steady-state hot-path latency gate: re-measures and FAILS if any
+# latency metric regressed >20% against the committed BENCH_hotpath.json.
+bench-hotpath:
+	python -m benchmarks.hotpath --check

@@ -1,0 +1,277 @@
+"""Steady-state hot-path benchmark + regression gate.
+
+Measures what the async engine's retrace-free, zero-copy plumbing is
+supposed to guarantee (and what the seed code violated):
+
+* per-step steady-state latency of each worker (collect one trajectory /
+  one model epoch / one policy-improvement step);
+* retrace counts: the ring trainer's ``train_epoch`` must compile ONCE
+  across growing buffer fills (seed behavior: one XLA retrace per data
+  refresh);
+* parameter-server costs: ``pull_if_newer`` on an unchanged version
+  (lock + int compare) vs a full ``pull_host`` materialisation;
+* end-to-end ``threads``-mode throughput (trajs/s, policy steps/s).
+
+Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
+the repo root. With ``--check``, compares fresh numbers against the
+committed baseline WITHOUT rewriting it and FAILS (exit 1) on a >20%
+latency regression, so the perf trajectory is tracked PR over PR:
+
+  python -m benchmarks.hotpath --check        # or: make bench-hotpath
+  python -m benchmarks.hotpath                # re-baseline deliberately
+
+The latencies are absolute wall-clock on the measuring host: the gate is
+meaningful on the machine class that produced the baseline. On different
+hardware, re-baseline first.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BASELINE = REPO_ROOT / "BENCH_hotpath.json"
+REGRESSION_TOL = 0.20          # fail --check beyond +20% on any _us metric
+JITTER_FLOOR_US = 150.0        # minimum absolute slack: for sub-ms
+                               # metrics 20% is below scheduler jitter;
+                               # any real regression on those paths
+                               # (e.g. reintroducing a host copy) is
+                               # orders of magnitude, so it still trips
+WARMUP = 3
+REPS = 20
+MICRO_REPS = 100               # sub-ms metrics: min over a longer window
+                               # so one background burst can't poison it
+
+
+def _require(ok, msg):
+    """assert that survives python -O: the timed closures' work must not
+    silently vanish (stripped asserts would time empty functions)."""
+    if not ok:
+        raise RuntimeError(msg)
+
+
+def _timeit(fn, reps=REPS, warmup=WARMUP):
+    """Best-case wall latency of fn() in microseconds (block on result).
+    Min over reps: the noise-robust estimator for steady-state latency on
+    a shared machine — medians swing with background load and would trip
+    the 20% regression gate spuriously."""
+    for _ in range(warmup):
+        fn()
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        samples.append((time.perf_counter() - t0) * 1e6)
+    return round(min(samples), 1)
+
+
+def _block(x):
+    for leaf in jax.tree.leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return x
+
+
+def _build(env_name="pendulum", algo_name="me-trpo"):
+    from repro.core import AsyncTrainer, RunConfig
+    from benchmarks.common import build_algo
+    from repro.envs import make_env
+    env = make_env(env_name)
+    ens, pol, algo = build_algo(env, algo_name)
+    rc = RunConfig(total_trajs=8, seed=0)
+    return env, ens, algo, rc
+
+
+def bench_worker_steps(metrics):
+    """Steady-state per-step latency + retrace counts for all 3 workers."""
+    from repro.core import AsyncTrainer, RunConfig
+    env, ens, algo, rc = _build()
+    tr = AsyncTrainer(env, ens, algo, rc)
+
+    # -- collect: steady-state gated-pull + rollout + zero-copy push
+    def one_collect():
+        tr.collector.step()
+        _block(tr.data_server.drain())
+    metrics["collect_step_us"] = _timeit(one_collect, reps=MICRO_REPS)
+
+    # -- model: warm up, then keep feeding data so the buffer keeps
+    # growing across epochs — the compile count must stay flat (the seed
+    # retraced on every one of these refreshes).
+    mw = tr.model_worker
+    for _ in range(rc.min_warmup_trajs):
+        tr.collector.step()
+    mw.step()                         # builds trainer, first compile
+    compiles_at_warmup = mw._train_epoch.trace_count
+    for _ in range(6):                # growth phase (untimed)
+        tr.collector.step()
+        mw.stopper.reset()
+        _require(mw.step() is not None, "model worker idled mid-growth")
+    metrics["train_epoch_compiles_after_warmup"] = \
+        mw._train_epoch.trace_count - compiles_at_warmup
+    metrics["train_epoch_compiles_total"] = mw._train_epoch.trace_count
+
+    # steady-state epoch latency: no new data, pure drain-check + epoch
+    # (mw.step blocks via the float() on the validation loss)
+    def one_epoch():
+        mw.stopper.reset()
+        _require(mw.step() is not None, "model worker idled in timed epoch")
+    metrics["model_epoch_us"] = _timeit(one_epoch, reps=10)
+
+    # -- policy step: model server now has params
+    pw = tr.policy_worker
+
+    def one_policy_step():
+        _require(pw.step(), "policy worker had no model params")
+        _block(pw.state["policy"])
+    metrics["policy_step_us"] = _timeit(one_policy_step, reps=10)
+    return metrics
+
+
+def bench_parameter_server(metrics):
+    """Version-gated pull vs host materialisation."""
+    import jax.numpy as jnp
+    from repro.core.servers import ParameterServer
+    params = {"w": [jnp.ones((256, 256)) for _ in range(4)],
+              "b": [jnp.ones((256,)) for _ in range(4)]}
+    ps = ParameterServer()
+    ver = ps.push(params)
+
+    def gated():
+        for _ in range(100):
+            v, _ = ps.pull_if_newer(ver)
+            _require(v is None, "gated pull returned a value")
+    metrics["pull_unchanged_x100_us"] = _timeit(gated, reps=MICRO_REPS)
+    metrics["pull_host_us"] = _timeit(lambda: ps.pull_host(),
+                                      reps=MICRO_REPS)
+    metrics["push_us"] = _timeit(lambda: _block(ps._snapshot(params)),
+                                 reps=MICRO_REPS)
+    return metrics
+
+
+def bench_threads_throughput(metrics):
+    """End-to-end threads-mode run: real wall time, worker throughputs."""
+    from repro.core import AsyncTrainer, RunConfig
+    env, ens, algo, _ = _build()
+    # pace collection at 50x robot speed so the learners actually share
+    # the run (unpaced, a simulated pendulum rollout takes ~1ms and the
+    # stop criterion fires before the model/policy workers do anything)
+    rc = RunConfig(total_trajs=16, seed=0, collect_speed=50.0,
+                   pace_collection=True)
+    tr = AsyncTrainer(env, ens, algo, rc, mode="threads")
+    # pre-warm every compiled path (rollout, train_epoch, improve, eval)
+    # so the timed run measures steady state, not first-compile
+    for _ in range(rc.min_warmup_trajs):
+        tr.collector.step()
+    _require(tr.model_worker.step() is not None, "model warmup idled")
+    _require(tr.policy_worker.step(), "policy warmup had no model")
+    _block(tr.recorder._eval(tr.policy_worker.state["policy"],
+                             jax.random.key(0)))
+    pre_trajs = tr.collector.collected
+    pre_steps = tr.policy_worker.steps
+    pre_epochs = tr.model_worker.epochs
+    t0 = time.perf_counter()
+    tr.run()
+    wall = time.perf_counter() - t0
+    tr.collector.collected -= pre_trajs
+    tr.policy_worker.steps -= pre_steps
+    tr.model_worker.epochs -= pre_epochs
+    metrics["threads_wall_s"] = round(wall, 3)
+    metrics["threads_trajs_per_s"] = round(tr.collector.collected / wall, 2)
+    metrics["threads_policy_steps_per_s"] = round(
+        tr.policy_worker.steps / wall, 2)
+    metrics["threads_model_epochs_per_s"] = round(
+        tr.model_worker.epochs / wall, 2)
+    return metrics
+
+
+def run_bench() -> dict:
+    metrics = {}
+    bench_worker_steps(metrics)
+    bench_parameter_server(metrics)
+    bench_threads_throughput(metrics)
+    return {
+        "bench": "hotpath",
+        "backend": jax.default_backend(),
+        "invariants": {
+            "no_retrace_after_warmup":
+                metrics["train_epoch_compiles_after_warmup"] == 0,
+            "unchanged_pull_is_copy_free": True,   # by construction; see
+            # ParameterServer.pull_if_newer and tests/test_hotpath.py
+        },
+        "metrics": metrics,
+    }
+
+
+def check_regression(fresh: dict, baseline: dict):
+    """Return list of (metric, old, new, ratio) regressions >20%."""
+    regressions = []
+    base = baseline.get("metrics", {})
+    for k, new in fresh["metrics"].items():
+        if not k.endswith("_us"):
+            continue
+        old = base.get(k)
+        if not old:
+            continue
+        if new > old + max(old * REGRESSION_TOL, JITTER_FLOOR_US):
+            regressions.append((k, old, new, round(new / old, 2)))
+    if not fresh["invariants"]["no_retrace_after_warmup"]:
+        regressions.append(("train_epoch_retraced", 0,
+                            fresh["metrics"]
+                            ["train_epoch_compiles_after_warmup"], 0))
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="fail (exit 1) on >20%% regression vs the "
+                         "committed BENCH_hotpath.json before updating it")
+    ap.add_argument("--out", default=str(BASELINE))
+    args = ap.parse_args(argv)
+
+    fresh = run_bench()
+    for k, v in fresh["metrics"].items():
+        print(f"hotpath/{k},{v}")
+
+    out = Path(args.out)
+    status = 0
+    if args.check and out.exists():
+        baseline = json.loads(out.read_text())
+        regs = check_regression(fresh, baseline)
+        if regs:
+            # a loaded machine can blow past 20% on the fast metrics:
+            # re-measure once and keep the per-metric best before failing
+            print("apparent regression; re-measuring once to rule out "
+                  "background load...", file=sys.stderr)
+            retry = run_bench()
+            for k, v in retry["metrics"].items():
+                old = fresh["metrics"].get(k)
+                if k.endswith("_us") and isinstance(old, (int, float)):
+                    fresh["metrics"][k] = min(old, v)
+            fresh["invariants"]["no_retrace_after_warmup"] = (
+                fresh["invariants"]["no_retrace_after_warmup"]
+                and retry["invariants"]["no_retrace_after_warmup"])
+            regs = check_regression(fresh, baseline)
+        if regs:
+            for k, old, new, ratio in regs:
+                print(f"REGRESSION {k}: {old} -> {new} ({ratio}x)",
+                      file=sys.stderr)
+            return 1
+        print(f"hotpath check ok: no metric regressed "
+              f">{int(REGRESSION_TOL * 100)}% vs {out.name}")
+        # --check never rewrites the baseline: a lucky quiet-machine run
+        # would silently ratchet the bar down for every later run.
+        # Re-baseline deliberately by running without --check.
+        return status
+    out.write_text(json.dumps(fresh, indent=1) + "\n")
+    print(f"wrote {out}")
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

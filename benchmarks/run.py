@@ -145,6 +145,24 @@ def roofline(full: bool):
              f"useful_flop_frac={r['useful_flop_frac']}")
 
 
+# --------------------------------------------------------------- hotpath
+def hotpath(full: bool):
+    """Steady-state async hot-path latencies + retrace counts (see
+    benchmarks/hotpath.py). Measurement only: the committed
+    BENCH_hotpath.json baseline is seeded if absent but never
+    overwritten here — updating/gating it is `make bench-hotpath`'s
+    job, which checks for regressions first."""
+    from benchmarks.hotpath import run_bench, BASELINE
+    result = run_bench()
+    for k, v in result["metrics"].items():
+        emit(f"hotpath/{k}", v)
+    emit("hotpath/no_retrace_after_warmup",
+         result["invariants"]["no_retrace_after_warmup"],
+         "train_epoch must compile exactly once")
+    if not BASELINE.exists():
+        BASELINE.write_text(json.dumps(result, indent=1) + "\n")
+
+
 # ------------------------------------------------------- kernel micro
 def kernel_micro(full: bool):
     """Reference-path kernel microbenchmarks (CPU; relative numbers)."""
@@ -185,6 +203,7 @@ BENCHES = {
     "fig7": fig7_pr2_tasks,
     "roofline": roofline,
     "kernel": kernel_micro,
+    "hotpath": hotpath,
 }
 
 

@@ -2,6 +2,7 @@ from repro.core.clock import RealClock, VirtualClock
 from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
                                 SequentialTrainer)
-from repro.core.servers import DataServer, LocalBuffer, ParameterServer
+from repro.core.servers import (DataServer, LocalBuffer, ParameterServer,
+                                ReplayBuffer)
 from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
                                 PolicyImprovementWorker)

@@ -60,6 +60,28 @@ class RunConfig:
     early_stop: bool = True
     min_warmup_trajs: int = 4          # initial dataset before model pushes
     max_model_epochs_idle: int = 0     # unused in async (kept for parity)
+    # threads mode: sleep out each trajectory's robot time (horizon * dt /
+    # collect_speed) so wall-clock reproduces the paper's real-robot rate
+    # instead of racing simulated rollouts at compute speed
+    pace_collection: bool = False
+
+
+# One compiled eval program per (env, n_rollouts): every _Recorder used
+# to build (and trace) its own jitted lambda, so each trainer instance
+# paid a fresh compile for the same env — benchmarks build dozens.
+_EVAL_CACHE: Dict[Any, Callable] = {}
+
+
+def _eval_fn(env, eval_rollouts: int):
+    cache_key = (env, eval_rollouts)
+    fn = _EVAL_CACHE.get(cache_key)
+    if fn is None:
+        fn = jax.jit(lambda p, k: jnp.mean(jax.vmap(
+            lambda kk: env.rollout(
+                kk, lambda pp, s, k2: PI.deterministic_action(pp, s),
+                p)["rew"].sum())(jax.random.split(k, eval_rollouts))))
+        _EVAL_CACHE[cache_key] = fn
+    return fn
 
 
 class _Recorder:
@@ -67,10 +89,7 @@ class _Recorder:
         self.env = env
         self.n = eval_rollouts
         self.trace: List[Dict[str, float]] = []
-        self._eval = jax.jit(lambda p, k: jnp.mean(jax.vmap(
-            lambda kk: env.rollout(
-                kk, lambda pp, s, k2: PI.deterministic_action(pp, s),
-                p)["rew"].sum())(jax.random.split(k, eval_rollouts))))
+        self._eval = _eval_fn(env, eval_rollouts)
 
     def record(self, t, trajs, policy_params, key):
         ret = float(self._eval(policy_params, key))
@@ -82,8 +101,12 @@ class _Recorder:
 
 class AsyncTrainer:
     def __init__(self, env, ens_cfg: DYN.EnsembleConfig, algo,
-                 run_cfg: RunConfig = RunConfig(), *, mode: str = "event"):
+                 run_cfg: Optional[RunConfig] = None, *,
+                 mode: str = "event"):
         self.env = env
+        # fresh per-instance config: a shared mutable default would leak
+        # one caller's tweaks into every later trainer
+        run_cfg = RunConfig() if run_cfg is None else run_cfg
         self.run_cfg = run_cfg
         self.mode = mode
         key = jax.random.key(run_cfg.seed)
@@ -148,13 +171,18 @@ class AsyncTrainer:
     def _run_threads(self):
         rc = self.run_cfg
         stop = threading.Event()
+        t0 = time.monotonic()   # all trace rows are relative to t0
 
         def collect_loop():
             while not stop.is_set() and \
                     self.collector.collected < rc.total_trajs:
+                t_step = time.monotonic()
                 dur = self.collector.step()
-                # production would pace on the robot's control frequency;
-                # here the rollout itself takes real compute time
+                if rc.pace_collection:
+                    # emulate the robot's control frequency: a trajectory
+                    # occupies `dur` seconds of real time regardless of
+                    # how fast the simulated rollout computes
+                    time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
             stop.set()
 
         def model_loop():
@@ -170,14 +198,13 @@ class AsyncTrainer:
                     if n % rc.eval_every_policy_steps == 0:
                         self._keval, k = jax.random.split(self._keval)
                         self.recorder.record(
-                            time.monotonic(), self.collector.collected,
+                            time.monotonic() - t0, self.collector.collected,
                             self.policy_worker.state["policy"], k)
                 else:
                     time.sleep(0.002)
 
         threads = [threading.Thread(target=f, daemon=True)
                    for f in (collect_loop, model_loop, policy_loop)]
-        t0 = time.monotonic()
         for th in threads:
             th.start()
         threads[0].join()
@@ -194,10 +221,12 @@ class SequentialTrainer:
     """Classic synchronous MBRL (Fig. 1b): collect N -> fit model to
     convergence (early stop / max epochs) -> G policy steps -> repeat."""
 
-    def __init__(self, env, ens_cfg, algo, run_cfg: RunConfig = RunConfig(),
+    def __init__(self, env, ens_cfg, algo,
+                 run_cfg: Optional[RunConfig] = None,
                  *, n_rollouts: int = 5, max_model_epochs: int = 50,
                  policy_steps: int = 20):
         self.env = env
+        run_cfg = RunConfig() if run_cfg is None else run_cfg
         self.run_cfg = run_cfg
         self.n_rollouts = n_rollouts
         self.max_model_epochs = max_model_epochs

@@ -4,29 +4,58 @@ Workers communicate EXCLUSIVELY through these: a data buffer server and
 two parameter servers (model, policy). Thread-safe, versioned; ``pull``
 never blocks on a writer (the paper's lock-free spirit at phase
 granularity — see DESIGN.md §2 for the TPU adaptation).
+
+Hot-path invariants (see benchmarks/hotpath.py, which enforces them):
+
+* ``ParameterServer`` keeps values DEVICE-RESIDENT. ``push``/``pull``
+  never round-trip through the host; ``pull_host`` exists only for
+  checkpoint / serving boundaries.
+* ``ParameterServer.pull_if_newer(version)`` costs one lock + integer
+  compare when the version is unchanged — no pytree traversal, no copy.
+* ``ReplayBuffer`` is a preallocated fixed-capacity ring of static-shape
+  arrays: no per-epoch ``np.concatenate``, no growing shapes, so a
+  trainer compiled against ``train_view()`` never retraces.
 """
 from __future__ import annotations
 
 import threading
-from typing import Any, List, Optional
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+# NOTE: on backends without buffer aliasing (CPU) the donated jits below
+# warn once at compile that donation fell back to a copy — that is
+# expected there and left visible on purpose (no global warning filter).
 
 
 class ParameterServer:
-    """Versioned pytree store (Alg. 1/2/3 'Pull/Push parameters')."""
+    """Versioned pytree store (Alg. 1/2/3 'Pull/Push parameters').
+
+    Values stay on device. ``push`` snapshots leaves with a device-side
+    copy so published versions are isolated from training buffers that
+    the pusher later donates back into its jitted update step.
+    """
 
     def __init__(self, initial=None):
         self._lock = threading.Lock()
-        self._value = initial
+        # snapshot like push(): the stored version must stay isolated
+        # from buffers the caller may later donate into a jit
+        self._value = None if initial is None else self._snapshot(initial)
         self._version = 0 if initial is None else 1
 
+    @staticmethod
+    def _snapshot(value):
+        # device->device copy (cheap); NOT a host transfer. Isolates the
+        # stored version from donate_argnums buffer reuse by the pusher.
+        return jax.tree.map(jnp.copy, value)
+
     def push(self, value) -> int:
-        # device->host copy outside the lock; keep the critical section tiny
-        host = jax.tree.map(np.asarray, value)
+        snap = self._snapshot(value)    # copy outside the lock
         with self._lock:
-            self._value = host
+            self._value = snap
             self._version += 1
             return self._version
 
@@ -34,6 +63,25 @@ class ParameterServer:
         """Returns (value, version); value is None until the first push."""
         with self._lock:
             return self._value, self._version
+
+    def pull_if_newer(self, version: int):
+        """Version-gated pull: returns (value, current_version) when the
+        server holds something newer than ``version``, else
+        (None, current_version). The unchanged path is one lock + int
+        compare — no copies, no pytree traversal."""
+        with self._lock:
+            if self._version == version or self._value is None:
+                return None, self._version
+            return self._value, self._version
+
+    def pull_host(self):
+        """Host-materialised pull for checkpoint / serving boundaries —
+        the ONLY place a device->host copy of the store is allowed."""
+        with self._lock:
+            value, version = self._value, self._version
+        if value is None:
+            return None, version
+        return jax.tree.map(np.asarray, value), version
 
     @property
     def version(self) -> int:
@@ -43,7 +91,11 @@ class ParameterServer:
 
 class DataServer:
     """FIFO trajectory buffer server (Alg. 1 'Push data', Alg. 2 line 3:
-    'move all trajectories from the remote buffer')."""
+    'move all trajectories from the remote buffer').
+
+    Zero-copy: pushed trajectories are stored by reference (jax arrays
+    are immutable, so handing them across threads is safe) — no
+    device->host materialisation on the hot path."""
 
     def __init__(self):
         self._lock = threading.Lock()
@@ -51,9 +103,8 @@ class DataServer:
         self._total = 0
 
     def push(self, traj) -> int:
-        host = jax.tree.map(np.asarray, traj)
         with self._lock:
-            self._items.append(host)
+            self._items.append(traj)
             self._total += 1
             return self._total
 
@@ -73,10 +124,122 @@ class DataServer:
             return len(self._items)
 
 
+# --------------------------------------------------------------------- ring
+@partial(jax.jit, donate_argnums=(0,))
+def _ring_write(storage, traj, cursor):
+    """Scatter one trajectory into the ring at ``cursor`` (wraps)."""
+    h = jax.tree.leaves(traj)[0].shape[0]
+    cap = jax.tree.leaves(storage)[0].shape[0]
+    idx = (cursor + jnp.arange(h)) % cap
+    return jax.tree.map(lambda buf, t: buf.at[idx].set(t), storage, traj)
+
+
+class ReplayBuffer:
+    """Preallocated fixed-capacity transition ring with a held-out
+    validation ring (Alg. 2: the model learner trains on its LOCAL
+    buffer; §4 'The local buffer is of fixed size and first-in-first-out').
+
+    Replaces ``LocalBuffer``'s list-of-trajectories + per-epoch
+    ``np.concatenate``: storage is device-resident, shapes are static, the
+    write is a single compiled scatter, and FIFO eviction falls out of the
+    ring cursor. ``train_view``/``val_view`` return the full-capacity
+    arrays plus the count of valid rows — consumers sample/mask against
+    that count, so their compiled shapes never change as data accumulates.
+    """
+
+    def __init__(self, capacity: int, *, val_capacity: Optional[int] = None,
+                 holdout_frac: float = 0.2):
+        self.capacity = int(capacity)
+        self.val_capacity = int(val_capacity if val_capacity is not None
+                                else max(capacity // 4, 1))
+        self.holdout_frac = holdout_frac
+        self._every = (max(int(round(1 / holdout_frac)), 2)
+                       if holdout_frac > 0 else 0)
+        self._train: Optional[Dict[str, jax.Array]] = None
+        self._val: Optional[Dict[str, jax.Array]] = None
+        self._cursor = 0          # next train write position (transitions)
+        self._written = 0         # total train transitions ever written
+        self._val_cursor = 0
+        self._val_written = 0
+        self._trajs = 0           # total trajectories ever seen
+
+    def _alloc(self, traj) -> None:
+        def zeros(t, cap):
+            t = jnp.asarray(t)
+            return jnp.zeros((cap,) + t.shape[1:], t.dtype)
+        self._train = {k: zeros(v, self.capacity) for k, v in traj.items()}
+        if self._every:     # holdout_frac == 0 never writes the val ring
+            self._val = {k: zeros(v, self.val_capacity)
+                         for k, v in traj.items()}
+
+    @staticmethod
+    def _fit(traj, h: int, cap: int):
+        """FIFO semantics for a trajectory longer than its ring: keep the
+        last ``cap`` transitions (a duplicate-index scatter would
+        otherwise write in undefined order)."""
+        if h <= cap:
+            return traj, h
+        return {k: v[-cap:] for k, v in traj.items()}, cap
+
+    def add_traj(self, traj) -> None:
+        """Insert one trajectory (dict of (H, ...) arrays). Every
+        ``1/holdout_frac``-th trajectory goes to the validation ring."""
+        if self._train is None:
+            self._alloc(traj)
+        self._trajs += 1
+        h = int(jax.tree.leaves(traj)[0].shape[0])
+        traj = {k: jnp.asarray(v) for k, v in traj.items()}
+        if self._every and self._trajs % self._every == 0:
+            traj, h = self._fit(traj, h, self.val_capacity)
+            self._val = _ring_write(self._val, traj,
+                                    self._val_cursor % self.val_capacity)
+            self._val_cursor = (self._val_cursor + h) % self.val_capacity
+            self._val_written += h
+        else:
+            traj, h = self._fit(traj, h, self.capacity)
+            self._train = _ring_write(self._train, traj,
+                                      self._cursor % self.capacity)
+            self._cursor = (self._cursor + h) % self.capacity
+            self._written += h
+
+    def extend(self, trajs) -> int:
+        for t in trajs:
+            self.add_traj(t)
+        return len(trajs)
+
+    def train_view(self) -> Tuple[Optional[Dict[str, jax.Array]], int]:
+        """(full-capacity storage, number of valid rows). Static shapes,
+        so a jitted trainer fed from here compiles exactly once.
+
+        The view is a BORROW, not a snapshot: the next ``add_traj``
+        donates these buffers back into the ring write (in-place on
+        backends with buffer aliasing). Re-fetch after every insert and
+        do not hold a view across writes."""
+        return self._train, self.size
+
+    def val_view(self) -> Tuple[Optional[Dict[str, jax.Array]], int]:
+        return self._val, self.val_size
+
+    @property
+    def size(self) -> int:
+        return min(self._written, self.capacity)
+
+    @property
+    def val_size(self) -> int:
+        return min(self._val_written, self.val_capacity)
+
+    @property
+    def total_seen(self) -> int:
+        """Total trajectories ever inserted (incl. evicted ones)."""
+        return self._trajs
+
+
 class LocalBuffer:
-    """Fixed-size FIFO local buffer with a held-out validation split
-    (Alg. 2: model learner trains on its LOCAL buffer; §4 'The local
-    buffer is of fixed size and first-in-first-out')."""
+    """Legacy fixed-size FIFO list buffer with a held-out validation split.
+
+    Superseded on the hot path by :class:`ReplayBuffer` (static shapes, no
+    per-epoch concatenate); kept for tooling that wants host-side
+    trajectory lists."""
 
     def __init__(self, max_trajs: int = 200, holdout_frac: float = 0.2):
         self.max_trajs = max_trajs
@@ -103,7 +266,7 @@ class LocalBuffer:
     def _stack(self, items):
         if not items:
             return None
-        cat = {k: np.concatenate([t[k] for t in items], axis=0)
+        cat = {k: np.concatenate([np.asarray(t[k]) for t in items], axis=0)
                for k in items[0]}
         return cat
 

@@ -3,6 +3,15 @@ the MINIMAL unit of work (one rollout / one model epoch / one policy
 gradient step). The same worker objects run either as real threads
 (production) or inside the deterministic discrete-event engine
 (benchmarks) — see runtime.py.
+
+Hot-path invariants (enforced by tests/test_hotpath.py and
+benchmarks/hotpath.py):
+
+* every jitted step function compiles ONCE and never retraces as the
+  replay buffer fills (static ring shapes, see servers.ReplayBuffer);
+* parameter pulls are version-gated: an unchanged version costs one lock
+  + integer compare against a device-resident cache — no host copy, no
+  re-upload.
 """
 from __future__ import annotations
 
@@ -11,9 +20,8 @@ from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.servers import DataServer, LocalBuffer, ParameterServer
+from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
 from repro.mbrl.early_stop import EMAEarlyStop
@@ -30,7 +38,10 @@ class WorkerTimes:
 
 
 class DataCollectionWorker:
-    """Algorithm 1. Pull policy θ -> collect ONE trajectory -> push."""
+    """Algorithm 1. Pull policy θ -> collect ONE trajectory -> push.
+
+    The pull is version-gated: the worker keeps a device-resident policy
+    cache and only swaps it when the server holds a newer version."""
 
     def __init__(self, env, policy_server: ParameterServer,
                  data_server: DataServer, init_policy_params, key,
@@ -39,26 +50,33 @@ class DataCollectionWorker:
         self.policy_server = policy_server
         self.data_server = data_server
         self._key = key
-        self._fallback = jax.tree.map(np.asarray, init_policy_params)
+        self._policy_cache = jax.tree.map(jnp.asarray, init_policy_params)
+        self._policy_ver = 0
         self.speed = speed  # >1: faster collection (Fig. 5b)
         self.collected = 0
         self._rollout = jax.jit(
             lambda p, k: env.rollout(k, PI.sample_action, p))
 
     def step(self) -> float:
-        params, _ = self.policy_server.pull()           # Pull
-        if params is None:
-            params = self._fallback
+        fresh, self._policy_ver = self.policy_server.pull_if_newer(
+            self._policy_ver)                           # Pull (gated)
+        if fresh is not None:
+            self._policy_cache = fresh
         self._key, k = jax.random.split(self._key)
-        traj = self._rollout(params, k)                 # Step
+        traj = self._rollout(self._policy_cache, k)     # Step
         self.data_server.push(traj)                     # Push
         self.collected += 1
         return (self.env.horizon * self.env.dt) / self.speed
 
 
 class ModelLearningWorker:
-    """Algorithm 2. Drain data -> one epoch on the local FIFO buffer (with
-    EMA-validation early stopping, §5.4) -> push φ."""
+    """Algorithm 2. Drain data -> one epoch on the local FIFO ring buffer
+    (with EMA-validation early stopping, §5.4) -> push φ.
+
+    Storage is a preallocated :class:`ReplayBuffer`; the trainer is built
+    lazily on first data (capacity = max_trajs * horizon) and after that
+    every epoch runs the same compiled program — no retrace as the buffer
+    fills, no per-epoch concatenate, params/opt_state donated."""
 
     def __init__(self, ens_cfg: DYN.EnsembleConfig,
                  data_server: DataServer, model_server: ParameterServer,
@@ -67,12 +85,14 @@ class ModelLearningWorker:
         self.cfg = ens_cfg
         self.data_server = data_server
         self.model_server = model_server
-        self.buffer = LocalBuffer(max_trajs=max_trajs)
+        self.max_trajs = max_trajs
+        self.buffer: Optional[ReplayBuffer] = None    # lazy: needs horizon
         self._key, k0 = jax.random.split(key)
         self.params = DYN.init_ensemble(ens_cfg, k0)
-        opt, self._train_epoch, self._val_loss = DYN.make_model_trainer(
-            ens_cfg)
-        self.opt_state = opt.init(self.params)
+        self._train_epoch = None
+        self._val_loss = None
+        self._update_norm = None
+        self.opt_state = None
         self.stopper = EMAEarlyStop(weight=ema_weight, enabled=early_stop)
         self.epochs = 0
         self._have_data = False
@@ -81,9 +101,20 @@ class ModelLearningWorker:
         # paper's 'acquire an initial dataset' phase (§5.3)
         self.min_trajs = min_trajs
 
+    def _ensure_trainer(self, traj) -> None:
+        if self.buffer is not None:
+            return
+        horizon = int(jax.tree.leaves(traj)[0].shape[0])
+        capacity = self.max_trajs * horizon
+        self.buffer = ReplayBuffer(capacity)
+        opt, self._train_epoch, self._val_loss, self._update_norm = \
+            DYN.make_ring_trainer(self.cfg, capacity)
+        self.opt_state = opt.init(self.params)
+
     def _refresh_data(self) -> bool:
         new = self.data_server.drain()                  # Pull (move all)
         if new:
+            self._ensure_trainer(new[0])
             self.buffer.extend(new)
             self._have_data = True
             self.stopper.reset()                        # §4: resume training
@@ -96,16 +127,20 @@ class ModelLearningWorker:
             return None
         if self.stopper.stopped:
             return None
-        data = self.buffer.train_arrays()
-        val = self.buffer.val_arrays()
-        self.params = DYN.update_normalizer(
-            self.params, data["obs"], data["act"], data["next_obs"])
+        data, size = self.buffer.train_view()
+        self.params = {**self.params,
+                       "norm": self._update_norm(data, size)}
         self._key, k = jax.random.split(self._key)
         self.params, self.opt_state, tr_loss = self._train_epoch(
-            self.params, self.opt_state, data["obs"], data["act"],
-            data["next_obs"], k)
-        vloss = float(self._val_loss(self.params, val["obs"], val["act"],
-                                     val["next_obs"]))
+            self.params, self.opt_state, data, size, k)
+        vdata, vsize = self.buffer.val_view()
+        if vsize == 0:
+            # no held-out traj yet: validate on a val-ring-SHAPED slice
+            # of the train ring, so _val_loss still compiles only once
+            vcap = self.buffer.val_capacity
+            vdata = {k: v[:vcap] for k, v in data.items()}
+            vsize = min(size, vcap)
+        vloss = float(self._val_loss(self.params, vdata, vsize))
         self.stopper.update(vloss)
         self.epochs += 1
         self.model_server.push(self.params)             # Push
@@ -114,7 +149,10 @@ class ModelLearningWorker:
 
 class PolicyImprovementWorker:
     """Algorithm 3. Pull φ -> ONE policy-improvement step (TRPO/PPO/MB-MPO
-    on imagined rollouts) -> push θ."""
+    on imagined rollouts) -> push θ.
+
+    Keeps a device-resident model cache; an unchanged model version
+    costs one lock + integer compare."""
 
     def __init__(self, algo, policy_server: ParameterServer,
                  model_server: ParameterServer, key):
@@ -124,14 +162,20 @@ class PolicyImprovementWorker:
         self._key, k0 = jax.random.split(key)
         self.state = algo.init(k0)
         self.policy_server.push(self.state["policy"])
+        self._model_cache = None
+        self._model_ver = 0
         self.steps = 0
 
     def step(self) -> bool:
-        model_params, ver = self.model_server.pull()    # Pull
-        if model_params is None:
+        fresh, self._model_ver = self.model_server.pull_if_newer(
+            self._model_ver)                            # Pull (gated)
+        if fresh is not None:
+            self._model_cache = fresh
+        if self._model_cache is None:
             return False
         self._key, k = jax.random.split(self._key)
-        self.state, info = self.algo.improve(self.state, model_params, k)
+        self.state, info = self.algo.improve(self.state, self._model_cache,
+                                             k)
         self.steps += 1
         self.policy_server.push(self.state["policy"])   # Push
         return True

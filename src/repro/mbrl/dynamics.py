@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from repro.kernels.gmm import ops as gmm_ops
 from repro.optim.optimizers import adam, apply_updates
+from repro.utils.jit_stats import trace_counted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,13 +52,8 @@ def init_ensemble(cfg: EnsembleConfig, key):
 
 
 def update_normalizer(state, obs, act, next_obs):
-    x = jnp.concatenate([obs, act], -1)
-    dy = next_obs - obs
-    norm = {
-        "mu_in": x.mean(0), "sig_in": x.std(0) + 1e-4,
-        "mu_out": dy.mean(0), "sig_out": dy.std(0) + 1e-4,
-    }
-    return {**state, "norm": norm}
+    return {**state,
+            "norm": masked_norm_stats(obs, act, next_obs, obs.shape[0])}
 
 
 def member_forward(member, xn):
@@ -88,16 +84,64 @@ def predict(params, obs, act, key):
         preds, idx[None, :, None], axis=0)[0]
 
 
-def mse_loss(params, obs, act, next_obs):
+def masked_mse_loss(params, obs, act, next_obs, weights):
+    """MSE over rows where ``weights`` is 1 — used against full-capacity
+    ring storage, where rows past the valid count are garbage."""
     n = params["norm"]
     target = (next_obs - obs - n["mu_out"]) / n["sig_out"]
     x = jnp.concatenate([obs, act], -1)
     xn = (x - n["mu_in"]) / n["sig_in"]
     pred = gmm_ops.ensemble_mlp(params["members"], xn)   # (K, B, D)
-    return jnp.mean((pred - target[None]) ** 2)
+    per_row = jnp.mean((pred - target[None]) ** 2, axis=(0, 2))   # (B,)
+    w = weights.astype(per_row.dtype)
+    return jnp.sum(per_row * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def mse_loss(params, obs, act, next_obs):
+    return masked_mse_loss(params, obs, act, next_obs,
+                           jnp.ones(obs.shape[0], obs.dtype))
+
+
+def _sgd_epoch_scan(opt, params, opt_state, obs, act, next_obs, batches,
+                    n_active=None):
+    """Scan minibatch SGD over precomputed (nb, bs) index batches —
+    shared by the legacy and ring trainers.
+
+    ``n_active`` (traced scalar, optional) limits the epoch to the first
+    ``n_active`` batches WITHOUT changing the compiled shape: excess
+    batches are skipped at runtime via lax.cond (one branch executes in
+    an un-vmapped scan), so a ring trainer's static grid does
+    epoch-proportional work on a partially filled buffer and full grid
+    work only at steady state."""
+
+    def sgd(p, o, idx):
+        loss, g = jax.value_and_grad(mse_loss)(
+            p, obs[idx], act[idx], next_obs[idx])
+        upd, o = opt.update(g, o, p)
+        return apply_updates(p, upd), o, loss
+
+    def step(carry, xs):
+        i, idx = xs
+        p, o = carry
+        if n_active is None:
+            p2, o2, loss = sgd(p, o, idx)
+            return (p2, o2), loss
+        p2, o2, loss = jax.lax.cond(
+            i < n_active, sgd,
+            lambda p, o, idx: (p, o, jnp.zeros((), obs.dtype)), p, o, idx)
+        return (p2, o2), loss
+
+    nb = batches.shape[0]
+    (params, opt_state), losses = jax.lax.scan(
+        step, (params, opt_state), (jnp.arange(nb), batches))
+    if n_active is None:
+        return params, opt_state, losses.mean()
+    return params, opt_state, losses.sum() / jnp.maximum(n_active, 1)
 
 
 def make_model_trainer(cfg: EnsembleConfig):
+    """Legacy dynamic-shape trainer (retraces when the data size changes;
+    prefer make_ring_trainer on the hot path)."""
     opt = adam(cfg.lr)
 
     @jax.jit
@@ -107,24 +151,90 @@ def make_model_trainer(cfg: EnsembleConfig):
         bs = min(cfg.train_batch, n)
         nb = max(n // bs, 1)
         perm = jax.random.permutation(key, n)[:nb * bs]
-        batches = perm.reshape(nb, bs)
-
-        def step(carry, idx):
-            p, o = carry
-            loss, g = jax.value_and_grad(mse_loss)(
-                p, obs[idx], act[idx], next_obs[idx])
-            upd, o = opt.update(g, o, p)
-            return (apply_updates(p, upd), o), loss
-
-        (params, opt_state), losses = jax.lax.scan(step, (params, opt_state),
-                                                   batches)
-        return params, opt_state, losses.mean()
+        return _sgd_epoch_scan(opt, params, opt_state, obs, act, next_obs,
+                               perm.reshape(nb, bs))
 
     @jax.jit
     def val_loss(params, obs, act, next_obs):
         return mse_loss(params, obs, act, next_obs)
 
     return opt, train_epoch, val_loss
+
+
+def masked_norm_stats(obs, act, next_obs, size):
+    """Normalizer stats against ring storage: moments over the first
+    ``size`` valid rows (``size`` is traced — shapes stay static).
+    Returns only the ``norm`` dict so a jitted caller never copies the
+    ensemble members."""
+    w = (jnp.arange(obs.shape[0]) < size).astype(obs.dtype)
+    tot = jnp.maximum(w.sum(), 1.0)
+
+    def moments(v):
+        mu = (v * w[:, None]).sum(0) / tot
+        var = (((v - mu) ** 2) * w[:, None]).sum(0) / tot
+        return mu, jnp.sqrt(var) + 1e-4
+
+    x = jnp.concatenate([obs, act], -1)
+    dy = next_obs - obs
+    mu_in, sig_in = moments(x)
+    mu_out, sig_out = moments(dy)
+    return {"mu_in": mu_in, "sig_in": sig_in,
+            "mu_out": mu_out, "sig_out": sig_out}
+
+
+def make_ring_trainer(cfg: EnsembleConfig, capacity: int,
+                      *, epoch_batches: int | None = None,
+                      max_epoch_batches: int = 64):
+    """Retrace-free trainer over fixed-capacity ring storage.
+
+    All three returned functions close over STATIC shapes only
+    (``capacity`` and the static minibatch grid), so each compiles exactly
+    once regardless of how full the buffer is:
+
+    * ``update_norm(data, size)`` — masked normalizer stats (returns the
+      ``norm`` dict only, so no ensemble-member copy per refresh).
+    * ``train_epoch(params, opt_state, data, size, key)`` — a fixed grid
+      of ``nb`` minibatches of ``cfg.train_batch`` indices sampled
+      uniformly (with replacement) from the valid region ``[0, size)``;
+      only the first ``clip(size // bs, 1, nb)`` batches apply their
+      updates, so one epoch is one pass over the CURRENT data (like the
+      legacy trainer) while the compiled shape never changes.
+      ``params``/``opt_state`` are donated so the optimizer updates in
+      place where the backend supports buffer aliasing.
+    * ``val_loss(params, data, size)`` — masked MSE over a val ring.
+
+    ``train_epoch`` and ``val_loss`` carry a ``.trace_count`` attribute
+    (see repro.utils.jit_stats) so benchmarks/tests can assert the
+    no-retrace invariant.
+    """
+    opt = adam(cfg.lr)
+    bs = min(cfg.train_batch, max(int(capacity), 1))
+    nb = epoch_batches if epoch_batches is not None else \
+        min(max(int(capacity) // bs, 1), max_epoch_batches)
+
+    def _train_epoch(params, opt_state, data, size, key):
+        idx = jax.random.randint(key, (nb, bs), 0,
+                                 jnp.maximum(size, 1))
+        # one pass over the VALID region per epoch (like the legacy
+        # trainer), not over the whole capacity grid
+        n_active = jnp.clip(size // bs, 1, nb)
+        return _sgd_epoch_scan(opt, params, opt_state, data["obs"],
+                               data["act"], data["next_obs"], idx,
+                               n_active=n_active)
+
+    def _val_loss(params, data, size):
+        w = jnp.arange(data["obs"].shape[0]) < size
+        return masked_mse_loss(params, data["obs"], data["act"],
+                               data["next_obs"], w)
+
+    def _update_norm(data, size):
+        return masked_norm_stats(data["obs"], data["act"],
+                                 data["next_obs"], size)
+
+    train_epoch = trace_counted(_train_epoch, donate_argnums=(0, 1))
+    val_loss = trace_counted(_val_loss)
+    update_norm = trace_counted(_update_norm)
+    return opt, train_epoch, val_loss, update_norm
 
 
 def imagine_rollout(params, policy_fn, policy_params, s0, key, horizon,

@@ -5,6 +5,8 @@ TRPO or several PPO steps. Virtual-time accounting matches the MBRL
 engines (collection = horizon * dt per trajectory)."""
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
@@ -15,10 +17,11 @@ from repro.mbrl import trpo as TRPO
 
 
 class ModelFreeTrainer:
-    def __init__(self, env, pol_cfg, run_cfg: RunConfig = RunConfig(), *,
+    def __init__(self, env, pol_cfg, run_cfg: Optional[RunConfig] = None, *,
                  algo: str = "ppo", trajs_per_iter: int = 4,
                  ppo_epochs: int = 10, gamma: float = 0.99):
         self.env = env
+        run_cfg = RunConfig() if run_cfg is None else run_cfg
         self.rc = run_cfg
         self.algo = algo
         self.trajs_per_iter = trajs_per_iter

@@ -23,7 +23,9 @@ def init_policy(cfg: PolicyConfig, key):
         "w": [jax.random.normal(k, (a, b)) * (a ** -0.5)
               for k, a, b in zip(ks, dims[:-1], dims[1:])],
         "b": [jnp.zeros((b,)) for b in dims[1:]],
-        "log_std": jnp.full((cfg.act_dim,), cfg.init_log_std),
+        # strong f32 dtype: a weak-typed leaf here flips to strong after
+        # the first gradient step, forcing every consumer jit to retrace
+        "log_std": jnp.full((cfg.act_dim,), cfg.init_log_std, jnp.float32),
     }
 
 

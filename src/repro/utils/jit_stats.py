@@ -1,0 +1,34 @@
+"""Compile-count instrumentation for jitted hot-path functions.
+
+``trace_counted(fn, **jit_kw)`` wraps ``fn`` in ``jax.jit`` but counts how
+many times the Python body is traced (each trace == one XLA compile for a
+new input signature). The async hot path is built on the invariant that
+its stepped functions trace exactly once after warmup; the regression
+test (tests/test_hotpath.py) and the hotpath benchmark read
+``.trace_count`` to enforce it.
+"""
+from __future__ import annotations
+
+import jax
+
+
+class TraceCounted:
+    """Callable wrapping ``jax.jit(fn)`` that records trace events."""
+
+    def __init__(self, fn, **jit_kw):
+        self.trace_count = 0
+        self.__name__ = getattr(fn, "__name__", "trace_counted")
+
+        def counted(*args, **kwargs):
+            self.trace_count += 1
+            return fn(*args, **kwargs)
+
+        counted.__name__ = self.__name__
+        self._jitted = jax.jit(counted, **jit_kw)
+
+    def __call__(self, *args, **kwargs):
+        return self._jitted(*args, **kwargs)
+
+
+def trace_counted(fn, **jit_kw) -> TraceCounted:
+    return TraceCounted(fn, **jit_kw)

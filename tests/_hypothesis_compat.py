@@ -1,0 +1,80 @@
+"""Fallback for the ``hypothesis`` property-testing library.
+
+The real hypothesis is used when installed (see requirements-dev.txt).
+When it is missing, this module provides a tiny deterministic stand-in so
+the property tests still COLLECT and exercise a fixed number of seeded
+random cases instead of hard-failing at import. Only the strategy
+surface this repo uses is implemented: integers, floats, lists,
+sampled_from.
+
+Usage in test modules:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                           # fallback
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_EXAMPLES = 10
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(choices):
+            seq = list(choices)
+            return _Strategy(lambda rng: rng.choice(seq))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10, **_kw):
+            def draw(rng):
+                n = rng.randint(min_size, max_size)
+                return [elements.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+    st = _Strategies()
+
+    def given(*arg_strategies, **kw_strategies):
+        def decorate(fn):
+            # NOTE: deliberately no functools.wraps — copying fn's
+            # signature would make pytest treat the property arguments
+            # as fixtures
+            def wrapper(*args, **kwargs):
+                # @settings may sit outside (attribute lands on wrapper)
+                # or inside @given (attribute lands on fn) — honor both
+                n = getattr(wrapper, "_max_examples",
+                            getattr(fn, "_max_examples", _DEFAULT_EXAMPLES))
+                rng = random.Random(f"repro:{fn.__name__}")
+                for _ in range(n):
+                    drawn_args = tuple(s.draw(rng) for s in arg_strategies)
+                    drawn_kw = {k: s.draw(rng)
+                                for k, s in kw_strategies.items()}
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, **_kw):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

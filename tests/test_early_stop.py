@@ -1,5 +1,5 @@
 """EMA early stopping (paper §4 / §5.4, Fig. 5a)."""
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.mbrl.early_stop import EMAEarlyStop
 

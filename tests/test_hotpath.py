@@ -1,0 +1,227 @@
+"""Hot-path invariants: retrace-free ring-buffer training and
+version-gated, copy-free parameter pulls (ISSUE 1 tentpole).
+
+The two invariants under test (also tracked by benchmarks/hotpath.py):
+* NO RETRACE AFTER WARMUP — the ring trainer's ``train_epoch`` compiles
+  exactly once no matter how the buffer fills (the seed re-concatenated
+  the buffer each epoch, retracing on every data refresh);
+* NO HOST COPY ON UNCHANGED VERSION — ``pull_if_newer`` with a current
+  version returns immediately without touching the stored pytree.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
+from repro.mbrl import dynamics as DYN
+
+
+def _traj(i, h=4, d=2, a=1):
+    return {"obs": jnp.full((h, d), float(i)),
+            "act": jnp.full((h, a), float(i)),
+            "next_obs": jnp.full((h, d), float(i) + 0.5)}
+
+
+# ------------------------------------------------------------ ReplayBuffer
+def test_ring_static_shapes_and_growth():
+    rb = ReplayBuffer(capacity=20, holdout_frac=0.0)
+    shapes = set()
+    for i in range(9):
+        rb.add_traj(_traj(i))
+        data, size = rb.train_view()
+        shapes.add(tuple(v.shape for v in data.values()))
+        assert size == min((i + 1) * 4, 20)
+    assert len(shapes) == 1, "storage shapes must never change"
+
+
+def test_ring_fifo_eviction():
+    rb = ReplayBuffer(capacity=12, holdout_frac=0.0)   # 3 trajs of h=4
+    for i in range(7):
+        rb.add_traj(_traj(i))
+    data, size = rb.train_view()
+    assert size == 12
+    kept = sorted(set(np.asarray(data["obs"])[:, 0].tolist()))
+    assert kept == [4.0, 5.0, 6.0], "oldest trajectories must be evicted"
+    assert rb.total_seen == 7
+
+
+def test_ring_val_split():
+    rb = ReplayBuffer(capacity=40, holdout_frac=0.2)
+    for i in range(10):
+        rb.add_traj(_traj(i))
+    vdata, vsize = rb.val_view()
+    assert vsize > 0
+    assert rb.val_size <= rb.val_capacity
+    vals = set(np.asarray(vdata["obs"])[:vsize, 0].tolist())
+    tdata, tsize = rb.train_view()
+    trains = set(np.asarray(tdata["obs"])[:tsize, 0].tolist())
+    assert vals.isdisjoint(trains), "held-out trajs must not be trained on"
+
+
+def test_ring_traj_longer_than_capacity_keeps_newest():
+    """A trajectory longer than its ring must not scatter with duplicate
+    indices (undefined write order) — it keeps the LAST cap transitions."""
+    rb = ReplayBuffer(capacity=3, holdout_frac=0.0)
+    rb.add_traj({"obs": jnp.arange(8.0)[:, None]})
+    data, size = rb.train_view()
+    assert size == 3
+    kept = sorted(np.asarray(data["obs"])[:, 0].tolist())
+    assert kept == [5.0, 6.0, 7.0]
+    # val ring smaller than the horizon: same guarantee
+    rb2 = ReplayBuffer(capacity=8, holdout_frac=0.2)   # val_capacity = 2
+    for i in range(5):
+        rb2.add_traj(_traj(i))                         # traj #5 -> val
+    vdata, vsize = rb2.val_view()
+    assert vsize == 2 == rb2.val_capacity
+
+
+def test_ring_no_holdout():
+    rb = ReplayBuffer(capacity=8, holdout_frac=0.0)
+    for i in range(2):
+        rb.add_traj(_traj(i))
+    assert rb.val_size == 0
+
+
+# ----------------------------------------------------- retrace regression
+def test_train_epoch_compiles_exactly_once_across_fills():
+    """Seed behavior: one XLA retrace per buffer growth. Ring trainer:
+    exactly one compile, ever."""
+    cfg = DYN.EnsembleConfig(obs_dim=2, act_dim=1, hidden=8, n_models=2,
+                             train_batch=16)
+    capacity = 64
+    rb = ReplayBuffer(capacity, holdout_frac=0.0)
+    key = jax.random.key(0)
+    params = DYN.init_ensemble(cfg, key)
+    opt, train_epoch, val_loss, update_norm = DYN.make_ring_trainer(
+        cfg, capacity)
+    opt_state = opt.init(params)
+    assert train_epoch.trace_count == 0
+    for i in range(12):                       # buffer grows, wraps, evicts
+        rb.add_traj(_traj(i, h=4))
+        data, size = rb.train_view()
+        params = {**params, "norm": update_norm(data, size)}
+        params, opt_state, loss = train_epoch(
+            params, opt_state, data, size, jax.random.fold_in(key, i))
+        assert jnp.isfinite(loss)
+    assert train_epoch.trace_count == 1, \
+        f"train_epoch retraced {train_epoch.trace_count - 1} times"
+    assert val_loss.trace_count <= 1
+    assert update_norm.trace_count == 1
+
+
+def test_masked_loss_ignores_invalid_rows():
+    cfg = DYN.EnsembleConfig(obs_dim=2, act_dim=1, hidden=8, n_models=2)
+    params = DYN.init_ensemble(cfg, jax.random.key(0))
+    obs = jax.random.normal(jax.random.key(1), (8, 2))
+    act = jax.random.normal(jax.random.key(2), (8, 1))
+    nobs = obs + 0.1
+    w_half = jnp.arange(8) < 4
+    garbage = obs.at[4:].set(1e6)   # invalid region filled with junk
+    l_clean = DYN.masked_mse_loss(params, obs, act, nobs, w_half)
+    l_junk = DYN.masked_mse_loss(params, garbage, act,
+                                 nobs.at[4:].set(-1e6), w_half)
+    np.testing.assert_allclose(float(l_clean), float(l_junk), rtol=1e-6)
+
+
+# --------------------------------------------------------- ParameterServer
+def test_pull_if_newer_semantics():
+    ps = ParameterServer()
+    v, ver = ps.pull_if_newer(0)
+    assert v is None and ver == 0            # nothing pushed yet
+    ps.push({"w": jnp.ones(3)})
+    v, ver = ps.pull_if_newer(0)
+    assert v is not None and ver == 1
+    v2, ver2 = ps.pull_if_newer(ver)
+    assert v2 is None and ver2 == 1          # unchanged: no value returned
+    ps.push({"w": jnp.zeros(3)})
+    v3, ver3 = ps.pull_if_newer(ver)
+    assert ver3 == 2 and np.allclose(np.asarray(v3["w"]), 0)
+
+
+def test_pull_if_newer_returns_same_object_no_copy():
+    """The changed-version path hands back the stored reference; the
+    unchanged path must not touch the pytree at all."""
+    ps = ParameterServer()
+    ps.push({"w": jnp.ones(3)})
+    stored, ver = ps.pull()
+    again, _ = ps.pull_if_newer(0)
+    assert all(a is b for a, b in zip(jax.tree.leaves(stored),
+                                      jax.tree.leaves(again)))
+
+
+def test_push_isolates_from_donated_buffers():
+    """push snapshots device-side: mutating/invalidating the pushed
+    pytree's buffers later must not corrupt the stored version."""
+    ps = ParameterServer()
+    src = {"w": jnp.ones(3)}
+    ps.push(src)
+    src["w"].delete()                        # simulate donation reuse
+    val, _ = ps.pull()
+    np.testing.assert_allclose(np.asarray(val["w"]), 1.0)
+
+
+def test_pull_host_materializes_numpy():
+    ps = ParameterServer()
+    assert ps.pull_host() == (None, 0)
+    ps.push({"w": jnp.full((2,), 3.0)})
+    host, ver = ps.pull_host()
+    assert isinstance(host["w"], np.ndarray) and ver == 1
+
+
+def test_pull_if_newer_under_concurrent_push():
+    """Version gating never goes backwards or tears under racing pushes."""
+    ps = ParameterServer({"w": jnp.zeros(4)})
+    stop = threading.Event()
+    errors = []
+
+    def pusher(v):
+        for _ in range(50):
+            ps.push({"w": jnp.full(4, float(v))})
+
+    def gated_puller():
+        ver = 0
+        while not stop.is_set():
+            val, new_ver = ps.pull_if_newer(ver)
+            if new_ver < ver:
+                errors.append(("version went backwards", ver, new_ver))
+            if val is not None:
+                arr = np.asarray(val["w"])
+                if not np.all(arr == arr[0]):
+                    errors.append(("torn read", arr))
+            ver = new_ver
+
+    threads = [threading.Thread(target=pusher, args=(i,)) for i in range(3)]
+    pt = threading.Thread(target=gated_puller)
+    pt.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    pt.join()
+    assert not errors, errors
+    assert ps.version == 151
+
+
+# ------------------------------------------------------------- integration
+def test_model_worker_never_retraces_and_gated_pulls():
+    """End-to-end: grow data across many worker epochs; the trainer must
+    compile once and unchanged pulls must return None."""
+    from repro.core.workers import ModelLearningWorker
+    cfg = DYN.EnsembleConfig(obs_dim=2, act_dim=1, hidden=8, n_models=2,
+                             train_batch=16)
+    ds, ms = DataServer(), ParameterServer()
+    mw = ModelLearningWorker(cfg, ds, ms, jax.random.key(0),
+                             max_trajs=8, early_stop=False, min_trajs=2)
+    for i in range(10):
+        ds.push(_traj(i, h=4))
+        mw.step()
+    assert mw.epochs >= 8
+    assert mw._train_epoch.trace_count == 1
+    # consumer sees versions advance; unchanged pull is a no-op
+    val, ver = ms.pull_if_newer(0)
+    assert val is not None and ver == mw.epochs
+    assert ms.pull_if_newer(ver) == (None, ver)

@@ -156,7 +156,7 @@ def test_gmm_pallas_vs_oracle(dims, dtype):
 
 
 # ------------------------------------------------- hypothesis properties
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 
 @settings(max_examples=15, deadline=None)

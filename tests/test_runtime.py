@@ -79,6 +79,32 @@ def test_threads_mode_smoke():
     assert trace[-1]["trajs"] >= 3
 
 
+def test_threads_trace_times_relative_and_monotonic():
+    """All trace rows must be seconds since run start (mid-run records
+    used to be absolute time.monotonic() while the final row was
+    relative)."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo,
+                      RunConfig(total_trajs=4, seed=0,
+                                eval_every_policy_steps=1),
+                      mode="threads")
+    trace = tr.run()
+    times = [r["time"] for r in trace]
+    assert all(0.0 <= t < 600.0 for t in times), times
+    assert times == sorted(times), times
+
+
+def test_run_config_not_shared_between_trainers():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    a = AsyncTrainer(env, ens, algo)
+    a.run_cfg.total_trajs = 999
+    ens, algo = build(env)
+    b = AsyncTrainer(env, ens, algo)
+    assert b.run_cfg.total_trajs != 999
+
+
 def test_stopping_criterion_total_trajs():
     env = make_env("pendulum")
     ens, algo = build(env)
