@@ -129,6 +129,22 @@ def bench_worker_steps(metrics):
         _require(pw.step(), "policy worker had no model params")
         _block(pw.state["policy"])
     metrics["policy_step_us"] = _timeit(one_policy_step, reps=10)
+
+    # -- imagination breakdown: the rollout alone (sample-then-compute
+    # scan), so the rollout-vs-TRPO split of policy_step_us is tracked
+    import jax.random as jrandom
+    from repro.mbrl.algos import _rollout_with_logp
+    algo_obj, rc_key = tr.policy_worker.algo, jrandom.key(0)
+    model_params, _ = tr.model_server.pull()
+    s0 = algo_obj.init_state_fn(rc_key, algo_obj.cfg.imagine_batch)
+    pol = pw.state["policy"]
+    roll = jax.jit(lambda mp, pp, s, k: _rollout_with_logp(
+        mp, pp, s, k, algo_obj.cfg.imagine_horizon, algo_obj.reward_fn,
+        algo_obj.predict_fn))
+
+    def one_imagine():
+        _block(roll(model_params, pol, s0, rc_key))
+    metrics["imagine_rollout_us"] = _timeit(one_imagine, reps=10)
     return metrics
 
 

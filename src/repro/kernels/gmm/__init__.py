@@ -1,1 +1,2 @@
-from repro.kernels.gmm.ops import ensemble_mlp, grouped_matmul
+from repro.kernels.gmm.ops import (ensemble_mlp, ensemble_mlp_select,
+                                   grouped_matmul)

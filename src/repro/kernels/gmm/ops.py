@@ -1,4 +1,21 @@
-"""Dispatching wrapper for grouped matmul / ensemble MLP."""
+"""Dispatching wrapper for grouped matmul / ensemble MLP.
+
+``grouped_matmul`` covers both layouts: equal-group batched (lhs 3d) and
+ragged (lhs 2d + ``group_sizes``, rows sorted by group — MegaBlocks-style
+sample-then-compute).  ``ensemble_mlp_select`` is the per-row
+member-assigned forward built on the ragged layout; its ``impl``:
+
+* ``pallas`` — sort rows by member, ragged Pallas kernel, unsort.
+  B rows of MXU FLOPs regardless of K. Default on TPU.
+* ``ref``    — same sort/compute/unsort contract on the pure-jnp ragged
+  oracle (gathers per-row weights). The parity baseline.
+* ``dense``  — evaluate ALL K members and select (K*B FLOPs). Small
+  ensembles on small hosts (CPU imagination, K<=5, hidden<=128) are
+  latency- not FLOP-bound, and one batched matmul beats per-row weight
+  gathers there — measured in benchmarks/hotpath.py. Default on CPU
+  only; GPU defaults to ``ref`` (FLOP-bound at real sizes, and the
+  gathered batched matmul keeps the no-K*-overcompute invariant).
+"""
 from __future__ import annotations
 
 import jax
@@ -6,21 +23,25 @@ import jax
 from repro.kernels.gmm import ref
 
 
-def _on_tpu() -> bool:
+def _backend() -> str:
     try:
-        return jax.default_backend() == "tpu"
+        return jax.default_backend()
     except RuntimeError:  # pragma: no cover
-        return False
+        return "cpu"
 
 
-def grouped_matmul(lhs, rhs, *, impl: str | None = None,
+def _on_tpu() -> bool:
+    return _backend() == "tpu"
+
+
+def grouped_matmul(lhs, rhs, group_sizes=None, *, impl: str | None = None,
                    interpret: bool = False):
     if impl is None:
         impl = "pallas" if _on_tpu() else "ref"
     if impl == "pallas":
         from repro.kernels.gmm import pallas as pk
-        return pk.grouped_matmul(lhs, rhs, interpret=interpret)
-    return ref.grouped_matmul(lhs, rhs)
+        return pk.grouped_matmul(lhs, rhs, group_sizes, interpret=interpret)
+    return ref.grouped_matmul(lhs, rhs, group_sizes)
 
 
 def ensemble_mlp(members, x, *, impl: str | None = None,
@@ -31,3 +52,21 @@ def ensemble_mlp(members, x, *, impl: str | None = None,
         from repro.kernels.gmm import pallas as pk
         return pk.ensemble_mlp(members, x, interpret=interpret)
     return ref.ensemble_mlp(members, x)
+
+
+def ensemble_mlp_select(members, x, idx, *, impl: str | None = None,
+                        interpret: bool = False):
+    """Forward row b through member ``idx[b]`` only. Same output as
+    ``ensemble_mlp(members, x)[idx[b], b]`` for every b."""
+    if impl is None:
+        backend = _backend()
+        impl = ("pallas" if backend == "tpu"
+                else "dense" if backend == "cpu" else "ref")
+    if impl == "pallas":
+        from repro.kernels.gmm import pallas as pk
+        return pk.ensemble_mlp_select(members, x, idx, interpret=interpret)
+    if impl == "ref":
+        return ref.ensemble_mlp_select(members, x, idx)
+    preds = ref.ensemble_mlp(members, x)            # (K, B, D)
+    return jax.numpy.take_along_axis(
+        preds, idx[None, :, None], axis=0)[0]

@@ -42,18 +42,32 @@ class AlgoConfig:
     n_models: int = 5
 
 
-def _imagined_batch(model_params, pol_params, s0, key, H, reward_fn):
-    traj = DYN.imagine_rollout(
-        model_params,
-        lambda p, s, k: PI.sample_action(p, s, k),
-        pol_params, s0, key, H, reward_fn)
-    # recompute pre-tanh actions' stats: we need pre-tanh acts for densities;
-    # re-sample pathwise with recorded states instead:
-    return traj
-
-
 def _rollout_with_logp(model_params, pol_params, s0, key, H, reward_fn,
-                       predict_fn=DYN.predict):
+                       predict_fn=None):
+    """Imagined rollout recording pre-tanh actions for exact densities.
+
+    ``predict_fn=None`` is the ensemble fast path: member assignments for
+    the whole horizon are drawn up front and each step runs the
+    single-member-per-row ``DYN.predict_assigned`` forward (no K*
+    ensemble overcompute inside the scan). A non-None ``predict_fn`` with
+    the ``(params, obs, act, key)`` contract swaps in any other world
+    model (e.g. ``wm_dynamics``)."""
+    if predict_fn is None:
+        ka, kp = jax.random.split(key)
+        members = DYN.sample_members(model_params, kp, (H, s0.shape[0]))
+
+        def step(carry, xs):
+            k, midx = xs
+            s = carry
+            a, pre, lp = PI.sample_with_logp(pol_params, s, k)
+            s2 = DYN.predict_assigned(model_params, s, a, midx)
+            r = reward_fn(s, a, s2)
+            return s2, (s, pre, r)
+
+        _, (obs, pre, rew) = jax.lax.scan(
+            step, s0, (jax.random.split(ka, H), members))
+        return obs, pre, rew
+
     def step(carry, k):
         s = carry
         ka, kp = jax.random.split(k)
@@ -76,12 +90,13 @@ class MEAlgo:
     """ME-TRPO / ME-PPO policy improvement."""
 
     def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
-                 init_state_fn, *, predict_fn=DYN.predict):
+                 init_state_fn, *, predict_fn=None):
         self.cfg = cfg
         self.pol_cfg = pol_cfg
         self.reward_fn = reward_fn
         self.init_state_fn = init_state_fn  # key, n -> (n, obs_dim)
-        self.predict_fn = predict_fn        # swap in a world model here
+        self.predict_fn = predict_fn        # None = ensemble fast path;
+        #                                     swap in a world model here
         if cfg.algo == "me-ppo":
             self._ppo_opt, self._ppo_step = PPO.make_ppo_step(cfg.ppo_lr)
         self._improve = jax.jit(self._improve_impl)
@@ -128,11 +143,12 @@ class MBMPO:
     post-adaptation surrogate averaged over members."""
 
     def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
-                 init_state_fn):
+                 init_state_fn, *, predict_fn=None):
         self.cfg = cfg
         self.pol_cfg = pol_cfg
         self.reward_fn = reward_fn
         self.init_state_fn = init_state_fn
+        self.predict_fn = predict_fn        # None = ensemble fast path
         self._outer_opt = adam(cfg.ppo_lr)
         self._improve = jax.jit(self._improve_impl)
 
@@ -142,6 +158,10 @@ class MBMPO:
                 "steps": jnp.zeros((), jnp.int32)}
 
     def _member_params(self, model_params, m):
+        if "members" not in model_params:
+            # non-ensemble world model (predict_fn swap): every inner
+            # loop adapts against the same model
+            return model_params
         members = jax.tree.map(
             lambda x: jax.lax.dynamic_slice_in_dim(x, m, 1, axis=0),
             model_params["members"])
@@ -150,7 +170,7 @@ class MBMPO:
     def _vpg_loss(self, pol, member, s0, key):
         obs, pre, rew = _rollout_with_logp(member, pol, s0, key,
                                            self.cfg.imagine_horizon,
-                                           self.reward_fn)
+                                           self.reward_fn, self.predict_fn)
         batch = _flat_batch(obs, pre, rew, self.cfg.gamma)
         lp = PI.log_prob(pol, batch["obs"], batch["act_pre"])
         return -(lp * batch["adv"]).mean(), rew.sum(0).mean()
@@ -164,15 +184,19 @@ class MBMPO:
             def per_member(m, k):
                 member = self._member_params(model_params, m)
                 k_in, k_out = jax.random.split(k)
-                s0 = self.init_state_fn(jax.random.fold_in(k_in, 7),
-                                        cfg.imagine_batch)
+                # independent keys for start-state draws and rollout
+                # sampling (reusing k_in for both correlates the inner
+                # rollout's action noise with the start states)
+                k_s0_in, k_roll_in = jax.random.split(k_in)
+                s0 = self.init_state_fn(k_s0_in, cfg.imagine_batch)
                 (l_in, _), g = jax.value_and_grad(
-                    self._vpg_loss, has_aux=True)(theta, member, s0, k_in)
+                    self._vpg_loss, has_aux=True)(theta, member, s0,
+                                                  k_roll_in)
                 adapted = jax.tree.map(lambda p, gg: p - cfg.inner_lr * gg,
                                        theta, g)
-                s1 = self.init_state_fn(jax.random.fold_in(k_out, 11),
-                                        cfg.imagine_batch)
-                l_out, ret = self._vpg_loss(adapted, member, s1, k_out)
+                k_s0_out, k_roll_out = jax.random.split(k_out)
+                s1 = self.init_state_fn(k_s0_out, cfg.imagine_batch)
+                l_out, ret = self._vpg_loss(adapted, member, s1, k_roll_out)
                 return l_out, ret
 
             keys = jax.random.split(key, K)
@@ -192,11 +216,13 @@ class MBMPO:
 
 def make_algo(cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
               init_state_fn, *, predict_fn=None):
+    """``predict_fn=None`` -> ensemble sample-then-compute fast path;
+    any ``(params, obs, act, key)`` callable swaps the world model for
+    every algorithm (ME-* and MB-MPO alike)."""
     if cfg.algo in ("me-trpo", "me-ppo"):
-        if predict_fn is not None:
-            return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn,
-                          predict_fn=predict_fn)
-        return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn)
+        return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn,
+                      predict_fn=predict_fn)
     if cfg.algo == "mb-mpo":
-        return MBMPO(cfg, pol_cfg, reward_fn, init_state_fn)
+        return MBMPO(cfg, pol_cfg, reward_fn, init_state_fn,
+                     predict_fn=predict_fn)
     raise ValueError(cfg.algo)

@@ -2,9 +2,17 @@
 
 An ensemble of K MLPs trained on (s, a) -> delta-s with input/output
 normalisation; sampling uses a uniform prior over ensemble members
-(Section 3 of the paper). The batched per-member forward runs through the
-``ensemble_mlp`` kernel dispatcher (Pallas grouped matmul on TPU; pure-jnp
-reference elsewhere)."""
+(Section 3 of the paper).
+
+Training evaluates every member on every row (``ensemble_mlp``: Pallas
+grouped matmul on TPU; pure-jnp reference elsewhere). Imagination only
+SAMPLES one member per row, so it must not PAY for all K: the hot path is
+``predict_assigned`` — draw member indices up front (``sample_members``),
+then per batch sort rows by member, run ONE ragged grouped MLP forward
+over the (B, .) batch (B rows of FLOPs instead of K*B) and unsort
+(``ensemble_mlp_select``). ``predict`` keeps the legacy
+compute-all-then-select contract; under the same member assignment both
+return the same next states."""
 from __future__ import annotations
 
 import dataclasses
@@ -75,8 +83,36 @@ def ensemble_forward(params, obs, act):
     return obs[None] + dyn * n["sig_out"] + n["mu_out"]
 
 
+def n_members(params) -> int:
+    return params["members"]["w"][0].shape[0]
+
+
+def sample_members(params, key, shape):
+    """Uniform prior over ensemble members (Sec. 3): I ~ U[K], iid per
+    element of ``shape``. Drawn OUTSIDE the imagination scan so the whole
+    horizon's assignments cost one RNG op."""
+    return jax.random.randint(key, shape, 0, n_members(params))
+
+
+def predict_assigned(params, obs, act, member_idx):
+    """Next-state prediction with rows pre-assigned to members.
+
+    member_idx: (B,) int in [0, K). Row b is evaluated by member
+    ``member_idx[b]`` ONLY — via the sort / ragged-grouped-matmul /
+    unsort path (``ensemble_mlp_select``), so a batch costs B rows of
+    FLOPs, not K*B. Identical output to ``predict`` under the same
+    assignment."""
+    x = jnp.concatenate([obs, act], -1)
+    n = params["norm"]
+    xn = (x - n["mu_in"]) / n["sig_in"]
+    dyn = gmm_ops.ensemble_mlp_select(params["members"], xn, member_idx)
+    return obs + dyn * n["sig_out"] + n["mu_out"]
+
+
 def predict(params, obs, act, key):
-    """Uniform-prior ensemble sample: s' ~ p_phi_I, I ~ U[K] (Sec. 3)."""
+    """Uniform-prior ensemble sample: s' ~ p_phi_I, I ~ U[K] (Sec. 3).
+    Legacy compute-all-then-select path; prefer ``sample_members`` +
+    ``predict_assigned`` on hot loops."""
     preds = ensemble_forward(params, obs, act)           # (K, B, D)
     K = preds.shape[0]
     idx = jax.random.randint(key, (obs.shape[0],), 0, K)
@@ -241,16 +277,21 @@ def imagine_rollout(params, policy_fn, policy_params, s0, key, horizon,
                     reward_fn):
     """Dyna imagination: roll the ensemble from s0 under the policy.
 
-    s0: (B, D). Returns dict with (H, B, ·) arrays."""
+    s0: (B, D). Returns dict with (H, B, ·) arrays. Sample-then-compute:
+    the whole horizon's member assignments are drawn up front and each
+    step runs the single-member-per-row ``predict_assigned`` forward —
+    no K* ensemble overcompute inside the scan."""
+    ka, kp = jax.random.split(key)
+    members = sample_members(params, kp, (horizon, s0.shape[0]))
 
-    def step(carry, k):
+    def step(carry, xs):
+        k, midx = xs
         s = carry
-        ka, kp = jax.random.split(k)
-        a = policy_fn(policy_params, s, ka)
-        s2 = predict(params, s, a, kp)
+        a = policy_fn(policy_params, s, k)
+        s2 = predict_assigned(params, s, a, midx)
         r = reward_fn(s, a, s2)
         return s2, (s, a, r)
 
-    _, (obs, act, rew) = jax.lax.scan(step, s0,
-                                      jax.random.split(key, horizon))
+    _, (obs, act, rew) = jax.lax.scan(
+        step, s0, (jax.random.split(ka, horizon), members))
     return {"obs": obs, "act": act, "rew": rew}

@@ -1,6 +1,12 @@
 """Mixture-of-Experts FFN with explicit TPU-pod sharding.
 
-Two strategies, chosen statically from the config/mesh:
+On a single TPU device (tp_size == fsdp_size == 1) expert dispatch is
+DROPLESS: (token, choice) pairs sort by expert and run through the ragged
+``kernels/gmm`` grouped matmul — no zero-padded capacity buffers and no
+overflow drops (``moe_forward_dropless``).
+
+Sharded meshes use capacity buffers; two strategies, chosen statically
+from the config/mesh:
 
 * ``ep`` (expert-parallel) — experts sharded over the ``model`` axis
   (requires num_experts % tp == 0). Each device dispatches its LOCAL tokens
@@ -25,6 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.gmm import ops as gmm_ops
 from repro.models.config import ModelConfig, ShardCtx
 from repro.models.layers import (_dense_init, matmul, psum_tp, reduce_tp,
                                  rmsnorm, tp_index)
@@ -47,6 +54,18 @@ def _fsdp_gather(w, ctx: ShardCtx, axis: int):
 
 def _expert_ff(cfg: ModelConfig) -> int:
     return cfg.d_ff  # per-expert hidden size (already per-expert in configs)
+
+
+def _route(cfg: ModelConfig, router, h):
+    """Router logits -> (full probs (T, E), normalised combine weights
+    (T, k), expert choices (T, k)) — the one routing definition shared by
+    every dispatch strategy."""
+    logits = jnp.dot(h, router.astype(h.dtype),
+                     preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    return probs, w, idx
 
 
 def init_moe(cfg: ModelConfig, ctx: ShardCtx, key) -> Dict[str, Any]:
@@ -113,11 +132,7 @@ def moe_forward_ws(cfg: ModelConfig, ctx: ShardCtx, p, x):
     hg = jax.lax.all_gather(h, fs_ax, axis=0, tiled=True)    # (T*fs, d)
     Tg = hg.shape[0]
     E, k = cfg.num_experts, cfg.top_k
-    logits = jnp.dot(hg, p["router"].astype(hg.dtype),
-                     preferred_element_type=jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)
-    w, idx = jax.lax.top_k(probs, k)
-    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    probs, w, idx = _route(cfg, p["router"], hg)
     cap = capacity(cfg, Tg)
     buf, slots, counts = _dispatch(cfg, hg, idx, cap)
     if moe_strategy(cfg, ctx) == "ep":
@@ -178,19 +193,55 @@ def moe_forward_ws(cfg: ModelConfig, ctx: ShardCtx, p, x):
     return x + y.reshape(B, S, d).astype(x.dtype), jnp.zeros((), jnp.float32)
 
 
-def moe_forward(cfg: ModelConfig, ctx: ShardCtx, p, x):
-    """x: (B, S, d) local. Returns (x + moe(x), aux_loss)."""
-    if getattr(ctx, "ws_moe", False) and ctx.fsdp_size > 1:
-        return moe_forward_ws(cfg, ctx, p, x)
+def moe_forward_dropless(cfg: ModelConfig, p, x):
+    """Dropless single-device MoE on the ragged grouped-matmul kernel.
+
+    Every (token, choice) pair is a row: rows are sorted by expert, each
+    expert FFN runs one ragged ``grouped_matmul`` over exactly its own
+    rows (``group_sizes = bincount(expert ids)``), and outputs scatter
+    back to token order. No zero-padded capacity buffers, no overflow
+    bin, no dropped tokens — T*k rows of FLOPs however skewed the
+    routing, with idle experts as zero-size groups."""
     B, S, d = x.shape
     T = B * S
     h = rmsnorm(x, p["ln"]).reshape(T, d)
     E, k = cfg.num_experts, cfg.top_k
-    logits = jnp.dot(h, p["router"].astype(h.dtype),
-                     preferred_element_type=jnp.float32)
-    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
-    w, idx = jax.lax.top_k(probs, k)                              # (T, k)
-    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    probs, w, idx = _route(cfg, p["router"], h)                   # (T, k)
+
+    eflat = idx.reshape(-1)                                       # (T*k,)
+    order = jnp.argsort(eflat)
+    rows = h[order // k]                   # token row of each sorted pair
+    counts = jnp.bincount(eflat, length=E)
+
+    a = gmm_ops.grouped_matmul(rows, p["we1"], counts)
+    g = gmm_ops.grouped_matmul(rows, p["we3"], counts)
+    hh = (jax.nn.silu(a.astype(jnp.float32))
+          * g.astype(jnp.float32)).astype(x.dtype)
+    out = gmm_ops.grouped_matmul(hh, p["we2"], counts)            # (T*k, d)
+
+    y = jnp.zeros_like(out).at[order].set(out).reshape(T, k, d)
+    y = (w[..., None] * y.astype(jnp.float32)).sum(1)
+
+    frac = counts.astype(jnp.float32) / jnp.maximum(T * k, 1)
+    aux = E * jnp.sum(frac * probs.mean(0))
+    return x + y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def moe_forward(cfg: ModelConfig, ctx: ShardCtx, p, x):
+    """x: (B, S, d) local. Returns (x + moe(x), aux_loss)."""
+    if getattr(ctx, "ws_moe", False) and ctx.fsdp_size > 1:
+        return moe_forward_ws(cfg, ctx, p, x)
+    if ctx.tp_size == 1 and ctx.fsdp_size == 1 and gmm_ops._on_tpu():
+        # single device, ragged Pallas kernel available: dropless path,
+        # no capacity buffers. (Off-TPU the ragged dispatch falls to the
+        # pure-jnp oracle, which materialises per-row gathered expert
+        # weights — keep the capacity einsum path there.)
+        return moe_forward_dropless(cfg, p, x)
+    B, S, d = x.shape
+    T = B * S
+    h = rmsnorm(x, p["ln"]).reshape(T, d)
+    E, k = cfg.num_experts, cfg.top_k
+    probs, w, idx = _route(cfg, p["router"], h)                   # (T, k)
 
     cap = capacity(cfg, T)
     buf, slots, counts = _dispatch(cfg, h, idx, cap)

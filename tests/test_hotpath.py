@@ -126,6 +126,34 @@ def test_masked_loss_ignores_invalid_rows():
     np.testing.assert_allclose(float(l_clean), float(l_junk), rtol=1e-6)
 
 
+# ------------------------------------------------- imagination hot path
+def test_imagination_jit_no_retrace():
+    """The sample-then-compute rollout (sorting by traced member draws,
+    ragged group sizes from bincount) must not leak dynamic shapes: one
+    compile across fresh keys and updated model/policy params."""
+    from repro.envs import make_env
+    from repro.mbrl import policy as PI
+    from repro.mbrl.algos import _rollout_with_logp
+    from repro.utils.jit_stats import trace_counted
+
+    env = make_env("pendulum")
+    cfg = DYN.EnsembleConfig(env.obs_dim, env.act_dim, hidden=16,
+                             n_models=3)
+    key = jax.random.key(0)
+    params = DYN.init_ensemble(cfg, key)
+    pol = PI.init_policy(PI.PolicyConfig(env.obs_dim, env.act_dim,
+                                         hidden=8), key)
+    s0 = env.reset_batch(key, 8)
+    roll = trace_counted(lambda mp, pp, s, k: _rollout_with_logp(
+        mp, pp, s, k, 10, jax.vmap(env.reward)))
+    for i in range(4):
+        params = jax.tree.map(lambda x: x * 1.01, params)
+        obs, pre, rew = roll(params, pol, s0, jax.random.fold_in(key, i))
+        assert jnp.isfinite(rew).all()
+    assert roll.trace_count == 1, \
+        f"imagination retraced {roll.trace_count - 1} times"
+
+
 # --------------------------------------------------------- ParameterServer
 def test_pull_if_newer_semantics():
     ps = ParameterServer()

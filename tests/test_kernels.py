@@ -155,6 +155,112 @@ def test_gmm_pallas_vs_oracle(dims, dtype):
                                rtol=tol)
 
 
+# ----------------------------------------------------------- ragged gmm
+RAGGED_CASES = [
+    # G, M, K, N, group_sizes — empty, full, uneven, tile-straddling
+    (4, 64, 32, 48, (10, 0, 54, 0)),
+    (3, 200, 130, 70, (200, 0, 0)),
+    (5, 37, 16, 16, (5, 8, 0, 20, 4)),
+    (1, 128, 128, 128, (128,)),
+    (3, 300, 96, 40, (1, 298, 1)),
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_gmm_pallas_vs_oracle(case, dtype):
+    G, M, K, N, sizes = case
+    assert sum(sizes) == M
+    gs = jnp.array(sizes, jnp.int32)
+    a = rand((M, K), dtype, 27)
+    b = rand((G, K, N), dtype, 28)
+    out = grouped_matmul(a, b, gs, interpret=True)
+    exp = gmm_ref.grouped_matmul(a, b, gs)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES[:3])
+def test_ragged_oracle_matches_per_group_numpy(case):
+    """The ragged oracle itself against the plainest possible spelling:
+    slice each group out and np.dot it."""
+    G, M, K, N, sizes = case
+    gs = jnp.array(sizes, jnp.int32)
+    a = rand((M, K), jnp.float32, 29)
+    b = rand((G, K, N), jnp.float32, 30)
+    out = np.asarray(gmm_ref.grouped_matmul(a, b, gs))
+    an, bn = np.asarray(a), np.asarray(b)
+    off = 0
+    for g, sz in enumerate(sizes):
+        exp = an[off:off + sz] @ bn[g]
+        np.testing.assert_allclose(out[off:off + sz], exp, atol=1e-4,
+                                   rtol=1e-4)
+        off += sz
+
+
+def test_ragged_gmm_jits_with_traced_sizes():
+    """group_sizes is data (bincount of sampled members) — the ragged
+    path must trace with it as a dynamic operand."""
+    G, M, K, N = 3, 48, 16, 24
+    a = rand((M, K), jnp.float32, 31)
+    b = rand((G, K, N), jnp.float32, 32)
+    gs = jnp.array([20, 0, 28], jnp.int32)
+    out = jax.jit(gmm_ref.grouped_matmul)(a, b, gs)
+    exp = gmm_ref.grouped_matmul(a, b, gs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-5)
+
+
+def test_ensemble_mlp_select_impls_agree():
+    """dense (compute-all-and-select), ref (sort/ragged/unsort) and
+    pallas-interpret must produce the same per-row member outputs."""
+    from repro.kernels.gmm import ops as gmm_ops
+    from repro.kernels.gmm import pallas as gmm_pallas
+    K_, B, Din, Dh, Dout = 4, 33, 7, 24, 5
+    members = {
+        "w": [rand((K_, Din, Dh), jnp.float32, 33),
+              rand((K_, Dh, Dout), jnp.float32, 34)],
+        "b": [rand((K_, Dh), jnp.float32, 35),
+              rand((K_, Dout), jnp.float32, 36)],
+    }
+    x = rand((B, Din), jnp.float32, 37)
+    for idx in (jnp.zeros((B,), jnp.int32),               # one full group
+                jnp.full((B,), K_ - 1, jnp.int32),        # last group only
+                jax.random.randint(jax.random.fold_in(KEY, 38), (B,), 0,
+                                   K_)):
+        dense = gmm_ops.ensemble_mlp_select(members, x, idx, impl="dense")
+        exp = jnp.take_along_axis(gmm_ref.ensemble_mlp(members, x),
+                                  idx[None, :, None], axis=0)[0]
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(exp))
+        ref_out = gmm_ops.ensemble_mlp_select(members, x, idx, impl="ref")
+        np.testing.assert_allclose(np.asarray(ref_out), np.asarray(exp),
+                                   atol=1e-5, rtol=1e-5)
+        pk_out = gmm_pallas.ensemble_mlp_select(members, x, idx,
+                                                interpret=True)
+        np.testing.assert_allclose(np.asarray(pk_out), np.asarray(exp),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_moe_dropless_matches_capacity_path():
+    """Dropless ragged dispatch must agree with the capacity-buffer path
+    when capacity is generous enough that nothing drops."""
+    from repro.models import moe as MOE
+    from repro.models.config import ModelConfig, ShardCtx
+    cfg = ModelConfig(name="t", family="moe", num_layers=1, d_model=16,
+                      num_heads=2, num_kv_heads=2, d_ff=32, vocab_size=64,
+                      num_experts=4, top_k=2, capacity_factor=8.0,
+                      dtype="float32")
+    ctx = ShardCtx()
+    p = MOE.init_moe(cfg, ctx, jax.random.key(0))
+    x = rand((2, 8, 16), jnp.float32, 40, 0.5)
+    y_cap, aux_cap = MOE.moe_forward(cfg, ctx, p, x)   # capacity (CPU gate)
+    y_drop, aux_drop = MOE.moe_forward_dropless(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y_drop), np.asarray(y_cap),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(float(aux_drop), float(aux_cap), rtol=1e-5)
+
+
 # ------------------------------------------------- hypothesis properties
 from _hypothesis_compat import given, settings, st
 

@@ -73,6 +73,50 @@ def test_ensemble_learns_dynamics():
     assert jnp.isfinite(pred).all()
 
 
+def test_predict_assigned_matches_predict():
+    """Sample-then-compute must be a pure reorganisation of the FLOPs:
+    under the assignment ``predict`` itself draws, ``predict_assigned``
+    returns bit-identical next states (dense select impl on CPU)."""
+    env = make_env("pendulum")
+    cfg = DYN.EnsembleConfig(env.obs_dim, env.act_dim, hidden=32,
+                             n_models=5)
+    key = jax.random.key(7)
+    params = DYN.init_ensemble(cfg, key)
+    obs = jax.random.normal(jax.random.fold_in(key, 1), (24, env.obs_dim))
+    act = jax.random.uniform(jax.random.fold_in(key, 2),
+                             (24, env.act_dim), minval=-1, maxval=1)
+    legacy = DYN.predict(params, obs, act, key)
+    idx = DYN.sample_members(params, key, (obs.shape[0],))
+    assigned = DYN.predict_assigned(params, obs, act, idx)
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(assigned))
+    # and the sort/ragged/unsort ref path agrees numerically
+    from repro.kernels.gmm import ops as gmm_ops
+    n = params["norm"]
+    xn = (jnp.concatenate([obs, act], -1) - n["mu_in"]) / n["sig_in"]
+    dyn = gmm_ops.ensemble_mlp_select(params["members"], xn, idx,
+                                      impl="ref")
+    ragged = obs + dyn * n["sig_out"] + n["mu_out"]
+    np.testing.assert_allclose(np.asarray(ragged), np.asarray(legacy),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_imagine_rollout_uses_every_member_and_is_finite():
+    env = make_env("pendulum")
+    cfg = DYN.EnsembleConfig(env.obs_dim, env.act_dim, hidden=16,
+                             n_models=3)
+    key = jax.random.key(9)
+    params = DYN.init_ensemble(cfg, key)
+    pol = PI.init_policy(PolicyConfig(env.obs_dim, env.act_dim, hidden=8),
+                         key)
+    s0 = env.reset_batch(key, 16)
+    traj = jax.jit(lambda p, pp, s, k: DYN.imagine_rollout(
+        p, PI.sample_action, pp, s, k, 12, jax.vmap(env.reward)))(
+        params, pol, s0, key)
+    assert traj["obs"].shape == (12, 16, env.obs_dim)
+    for k, v in traj.items():
+        assert jnp.isfinite(v).all(), k
+
+
 def test_trpo_improves_surrogate_and_respects_kl():
     env = make_env("pendulum")
     key = jax.random.key(3)
