@@ -1,11 +1,17 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-green bench bench-hotpath
+.PHONY: test test-green test-mesh bench bench-hotpath bench-hotpath-sharded
 
-# tier-1 verify, verbatim from ROADMAP.md (-x stops at the first of the
-# known pre-existing failures in test_arch_smoke/test_dryrun_small)
-test:
+# Default aggregate = the multi-device mesh suite FIRST, then the tier-1
+# verify verbatim from ROADMAP.md. The mesh suite must run as its own
+# step: pytest's -x stops at the first of the known pre-existing
+# failures (test_arch_smoke/test_dryrun_small), which sort before
+# tests/test_mesh.py — relying on collection alone would silently skip
+# it. (tests/test_mesh.py itself re-runs tests/_mesh_impl.py in an
+# isolated 8-device subprocess: the XLA flag must never leak into an
+# already-initialised jax process — device count locks on first use.)
+test: test-mesh
 	python -m pytest -x -q
 
 # the currently-green suite: everything except the two modules with
@@ -14,6 +20,12 @@ test-green:
 	python -m pytest -q --ignore=tests/test_arch_smoke.py \
 		--ignore=tests/test_dryrun_small.py
 
+# Role-sharded engine suite, run directly against 8 forced host devices
+# (faster than the tests/test_mesh.py subprocess wrapper; same tests).
+test-mesh:
+	XLA_FLAGS="$$XLA_FLAGS --xla_force_host_platform_device_count=8" \
+		python -m pytest -q tests/_mesh_impl.py
+
 bench:
 	python -m benchmarks.run
 
@@ -21,3 +33,7 @@ bench:
 # latency metric regressed >20% against the committed BENCH_hotpath.json.
 bench-hotpath:
 	python -m benchmarks.hotpath --check
+
+# Same gate + the role-sharded measurement (8-device subprocess).
+bench-hotpath-sharded:
+	python -m benchmarks.hotpath --check --sharded

@@ -205,11 +205,103 @@ def bench_threads_throughput(metrics):
     return metrics
 
 
-def run_bench() -> dict:
+def bench_sharded(metrics):
+    """Role-sharded hot path, measured in a SUBPROCESS forced to 8 host
+    devices (the parent keeps its single device, so the single-device
+    metrics above stay comparable PR over PR). Reports the same
+    steady-state latencies for the (1,2,1) role split plus the cost of a
+    cross-role parameter movement. New ``sharded_*_us`` metrics are
+    informational until they appear in the committed baseline."""
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8"
+                        ).strip()
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.hotpath", "--sharded-child"],
+        capture_output=True, text=True, env=env, cwd=str(REPO_ROOT),
+        timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"sharded child failed (rc={proc.returncode}):\n"
+            f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+    child = json.loads(proc.stdout.splitlines()[-1])
+    metrics.update(child)
+    return metrics
+
+
+def _sharded_child() -> dict:
+    """Runs INSIDE the forced-8-device subprocess: build the role-sharded
+    workers and time their steady-state steps (same protocol as
+    bench_worker_steps). Prints one JSON line on stdout."""
+    import jax  # noqa: F811  (re-import after XLA_FLAGS took effect)
+    from repro.core import AsyncTrainer
+    from repro.core.roles import replicated
+    from repro.core.servers import ParameterServer
+    env, ens, algo, rc = _build()
+    mesh = jax.make_mesh((8,), ("data",))
+    tr = AsyncTrainer(env, ens, algo, rc, mesh=mesh, role_ratios=(1, 2, 1))
+    _require(not tr.roles.shared, "8-device split must not be degenerate")
+    m = {"sharded_devices": 8}
+
+    mw = tr.model_worker
+    for _ in range(rc.min_warmup_trajs):
+        tr.collector.step()
+    mw.step()
+    compiles_at_warmup = mw._train_epoch.trace_count
+    for _ in range(4):
+        tr.collector.step()
+        mw.stopper.reset()
+        _require(mw.step() is not None, "sharded model worker idled")
+    m["sharded_train_epoch_compiles_after_warmup"] = \
+        mw._train_epoch.trace_count - compiles_at_warmup
+
+    def one_epoch():
+        mw.stopper.reset()
+        _require(mw.step() is not None, "sharded model worker idled")
+    m["sharded_model_epoch_us"] = _timeit(one_epoch, reps=10)
+
+    pw = tr.policy_worker
+
+    def one_policy_step():
+        _require(pw.step(), "sharded policy worker had no model params")
+        _block(pw.state["policy"])
+    m["sharded_policy_step_us"] = _timeit(one_policy_step, reps=10)
+
+    # cross-role movement: model-mesh params re-placed onto the policy
+    # sub-mesh by a version-gated pull (device->device, no host hop).
+    # One push outside the timer: a stale version re-pulls the same
+    # stored value every rep, so only the device_put is measured
+    ps = ParameterServer()
+    src, _ = tr.model_server.pull()
+    rp = replicated(tr.roles.policy)
+    ver = ps.push(src)
+
+    def cross_pull():
+        val, _ = ps.pull_if_newer(ver - 1, sharding=rp)
+        _require(val is not None, "stale-version pull returned nothing")
+        _block(val)
+    m["sharded_cross_role_pull_us"] = _timeit(cross_pull, reps=10)
+
+    def gated():
+        ver = ps.version
+        for _ in range(100):
+            v, _ = ps.pull_if_newer(ver, sharding=rp)
+            _require(v is None, "gated sharded pull returned a value")
+    m["sharded_pull_unchanged_x100_us"] = _timeit(gated, reps=MICRO_REPS)
+    return m
+
+
+def run_bench(*, sharded: bool = False) -> dict:
     metrics = {}
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
     bench_threads_throughput(metrics)
+    if sharded:
+        bench_sharded(metrics)
     return {
         "bench": "hotpath",
         "backend": jax.default_backend(),
@@ -247,10 +339,19 @@ def main(argv=None) -> int:
     ap.add_argument("--check", action="store_true",
                     help="fail (exit 1) on >20%% regression vs the "
                          "committed BENCH_hotpath.json before updating it")
+    ap.add_argument("--sharded", action="store_true",
+                    help="also measure the role-sharded path in a forced "
+                         "8-device subprocess (sharded_*_us metrics)")
+    ap.add_argument("--sharded-child", action="store_true",
+                    help=argparse.SUPPRESS)   # internal: see bench_sharded
     ap.add_argument("--out", default=str(BASELINE))
     args = ap.parse_args(argv)
 
-    fresh = run_bench()
+    if args.sharded_child:
+        print(json.dumps(_sharded_child()))
+        return 0
+
+    fresh = run_bench(sharded=args.sharded)
     for k, v in fresh["metrics"].items():
         print(f"hotpath/{k},{v}")
 
@@ -264,7 +365,7 @@ def main(argv=None) -> int:
             # re-measure once and keep the per-metric best before failing
             print("apparent regression; re-measuring once to rule out "
                   "background load...", file=sys.stderr)
-            retry = run_bench()
+            retry = run_bench(sharded=args.sharded)
             for k, v in retry["metrics"].items():
                 old = fresh["metrics"].get(k)
                 if k.endswith("_us") and isinstance(old, (int, float)):

@@ -217,6 +217,10 @@ def main() -> None:
     print("name,value,derived")
     for n in names:
         BENCHES[n](args.full)
+        # each figure sweeps its own env variants; drop their compiled
+        # eval programs so a long --full run can't grow the cache
+        from repro.core import clear_eval_cache
+        clear_eval_cache()
     out = Path(__file__).parent / "results" / "summary.csv"
     out.parent.mkdir(exist_ok=True)
     out.write_text("name,value,derived\n" + "\n".join(

@@ -1,7 +1,8 @@
 from repro.core.clock import RealClock, VirtualClock
+from repro.core.roles import RoleSplit, split_roles
 from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
-                                SequentialTrainer)
+                                SequentialTrainer, clear_eval_cache)
 from repro.core.servers import (DataServer, LocalBuffer, ParameterServer,
                                 ReplayBuffer)
 from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,

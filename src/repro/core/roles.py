@@ -6,15 +6,25 @@ leading (``data``/``pod``) axis into collector / model / policy sub-meshes
 in a configurable ratio; each worker then jits its step functions against
 its own sub-mesh while the host-side servers (core/servers.py) carry the
 pulls/pushes between them.
+
+Sharding conventions (enforced end-to-end by tests/_mesh_impl.py):
+
+* parameters are REPLICATED over their role's sub-mesh (``replicated``);
+* batch-like data (ring storage, imagined starts, TRPO batches) is
+  sharded along the sub-mesh's leading axis (``batch_sharded``);
+* cross-role movement happens only through ``ParameterServer.pull_if_newer
+  (sharding=...)`` / ``ReplayBuffer`` ingestion — explicit device-to-device
+  ``device_put``, never a host round-trip.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+import warnings
+from typing import Tuple
 
 import jax
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -22,6 +32,44 @@ class RoleSplit:
     collector: Mesh
     model: Mesh
     policy: Mesh
+    shared: bool = False   # True: degenerate fallback, roles overlap
+    axis: str | None = None    # the mesh axis the split was carved along;
+    #                            also the batch axis workers shard over
+
+    def describe(self) -> dict:
+        return {
+            "collector": list(self.collector.devices.shape),
+            "model": list(self.model.devices.shape),
+            "policy": list(self.policy.devices.shape),
+            "shared": self.shared,
+            "axis": self.axis,
+        }
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    """Params replicated over every device of a role sub-mesh."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def batch_sharded(mesh: Mesh, axis: str | None = None) -> NamedSharding:
+    """Leading (batch) dim sharded along one mesh axis, rest replicated."""
+    axis = axis or mesh.axis_names[0]
+    return NamedSharding(mesh, PartitionSpec(axis))
+
+
+def num_shards(sharding: NamedSharding) -> int:
+    """Number of shards along the leading dim of ``batch_sharded`` output
+    (capacities/batches must be multiples of this: ``jax.device_put``
+    rejects uneven shards)."""
+    spec = sharding.spec
+    if not spec or spec[0] is None:
+        return 1
+    axes = spec[0] if isinstance(spec[0], tuple) else (spec[0],)
+    return int(np.prod([sharding.mesh.shape[a] for a in axes]))
+
+
+def round_up(n: int, multiple: int) -> int:
+    return -(-int(n) // int(multiple)) * int(multiple)
 
 
 def split_roles(mesh: Mesh, *, ratios: Tuple[int, int, int] = (1, 2, 1),
@@ -29,17 +77,39 @@ def split_roles(mesh: Mesh, *, ratios: Tuple[int, int, int] = (1, 2, 1),
     """Carve the mesh's leading axis into three role sub-meshes.
 
     ratios: relative share of the split axis per (collector, model, policy).
-    The split axis defaults to the first axis ("pod" on multi-pod, "data"
-    on a single pod)."""
+    The split axis defaults to the FIRST axis with enough devices for all
+    roles ("pod" on a mesh with >= 3 pods, otherwise "data" — a 2-pod
+    (2,16,16) mesh splits its 16-wide data axis, not the 2-wide pod axis).
+
+    Degenerate meshes (no axis with as many devices as roles, or an
+    explicitly requested axis that is too small, or a ratio rounding that
+    would starve a role) fall back to OVERLAPPING sub-meshes — every role
+    gets the full mesh — with a warning, so small hosts run the same code
+    path with trivial cross-role transfers."""
     names = list(mesh.axis_names)
-    axis = axis or names[0]
+    if axis is None:
+        axis = next((a for a in names
+                     if mesh.devices.shape[names.index(a)] >= len(ratios)),
+                    names[0])
     ai = names.index(axis)
-    n = mesh.devices.shape[ai]
+    n = int(mesh.devices.shape[ai])
+    if n < len(ratios):
+        warnings.warn(
+            f"split_roles: axis {axis!r} has {n} device(s) for "
+            f"{len(ratios)} roles; falling back to shared sub-meshes "
+            "(all roles use the full mesh)", stacklevel=2)
+        return RoleSplit(mesh, mesh, mesh, shared=True, axis=axis)
     total = sum(ratios)
     sizes = [max(1, n * r // total) for r in ratios]
-    # fix rounding so sizes sum to n
+    # fix rounding so sizes sum to n — never shrinking a role below 1
     while sum(sizes) > n:
-        sizes[int(np.argmax(sizes))] -= 1
+        shrinkable = [i for i, s in enumerate(sizes) if s > 1]
+        if not shrinkable:     # unreachable for n >= len(ratios); be safe
+            warnings.warn("split_roles: ratio rounding starved a role; "
+                          "falling back to shared sub-meshes", stacklevel=2)
+            return RoleSplit(mesh, mesh, mesh, shared=True, axis=axis)
+        i = max(shrinkable, key=sizes.__getitem__)
+        sizes[i] -= 1
     while sum(sizes) < n:
         sizes[int(np.argmin(sizes))] += 1
     meshes = []
@@ -50,4 +120,4 @@ def split_roles(mesh: Mesh, *, ratios: Tuple[int, int, int] = (1, 2, 1),
         sub = mesh.devices[tuple(idx)]
         meshes.append(Mesh(sub, mesh.axis_names))
         start += s
-    return RoleSplit(*meshes)
+    return RoleSplit(*meshes, axis=axis)

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.roles import RoleSplit, split_roles
 from repro.core.servers import DataServer, ParameterServer
 from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
                                 PolicyImprovementWorker, WorkerTimes)
@@ -69,18 +70,38 @@ class RunConfig:
 # One compiled eval program per (env, n_rollouts): every _Recorder used
 # to build (and trace) its own jitted lambda, so each trainer instance
 # paid a fresh compile for the same env — benchmarks build dozens.
+# The cache is strongly keyed on the env VALUE (envs are small frozen
+# dataclasses, so value-equal instances share one compiled program) but
+# BOUNDED: LRU eviction caps it at _EVAL_CACHE_MAX entries and
+# ``clear_eval_cache()`` empties it between benchmark sweep groups, so
+# sweeping many env variants can no longer grow it without bound, and
+# an evicted entry strands nothing (each _Recorder holds its own fn,
+# which stays valid standalone). Weakref keying was tried and rejected:
+# a weak key must compare like its referent to share across value-equal
+# envs, but then ANY death order of sharers either evicts an entry a
+# live trainer still needs or strands dead-keyed entries that can never
+# be hit again.
 _EVAL_CACHE: Dict[Any, Callable] = {}
+_EVAL_CACHE_MAX = 64
+
+
+def clear_eval_cache() -> None:
+    """Drop every cached eval program (and the env values keying them).
+    Benchmarks call this between sweep groups."""
+    _EVAL_CACHE.clear()
 
 
 def _eval_fn(env, eval_rollouts: int):
     cache_key = (env, eval_rollouts)
-    fn = _EVAL_CACHE.get(cache_key)
+    fn = _EVAL_CACHE.pop(cache_key, None)   # pop + reinsert = LRU touch
     if fn is None:
         fn = jax.jit(lambda p, k: jnp.mean(jax.vmap(
             lambda kk: env.rollout(
                 kk, lambda pp, s, k2: PI.deterministic_action(pp, s),
                 p)["rew"].sum())(jax.random.split(k, eval_rollouts))))
-        _EVAL_CACHE[cache_key] = fn
+    _EVAL_CACHE[cache_key] = fn
+    while len(_EVAL_CACHE) > _EVAL_CACHE_MAX:   # dicts iterate insertion-
+        del _EVAL_CACHE[next(iter(_EVAL_CACHE))]    # order: oldest first
     return fn
 
 
@@ -102,28 +123,47 @@ class _Recorder:
 class AsyncTrainer:
     def __init__(self, env, ens_cfg: DYN.EnsembleConfig, algo,
                  run_cfg: Optional[RunConfig] = None, *,
-                 mode: str = "event"):
+                 mode: str = "event", mesh=None,
+                 roles: Optional[RoleSplit] = None,
+                 role_ratios=(1, 2, 1), role_axis: Optional[str] = None):
+        """``mesh``/``roles``: run each worker against its own role
+        sub-mesh (core/roles.py). Pass a ``roles`` RoleSplit directly, or
+        a ``mesh`` to split by ``role_ratios`` along ``role_axis``.
+        Default (both None) is the single-device behaviour — all existing
+        callers and the event engine are untouched."""
         self.env = env
         # fresh per-instance config: a shared mutable default would leak
         # one caller's tweaks into every later trainer
         run_cfg = RunConfig() if run_cfg is None else run_cfg
         self.run_cfg = run_cfg
         self.mode = mode
+        if roles is None and mesh is not None:
+            roles = split_roles(mesh, ratios=tuple(role_ratios),
+                                axis=role_axis)
+        self.roles = roles
         key = jax.random.key(run_cfg.seed)
         kc, km, kp, self._keval = jax.random.split(key, 4)
         self.data_server = DataServer()
         self.model_server = ParameterServer()
         self.policy_server = ParameterServer()
+        # workers shard batches along the axis the split was carved on
+        # (NOT axis_names[0]: on a 2-pod mesh the split skips the 2-wide
+        # 'pod' axis and carves 'data')
         self.policy_worker = PolicyImprovementWorker(
-            algo, self.policy_server, self.model_server, kp)
+            algo, self.policy_server, self.model_server, kp,
+            mesh=roles.policy if roles else None,
+            batch_axis=roles.axis if roles else None)
         self.collector = DataCollectionWorker(
             env, self.policy_server, self.data_server,
             self.policy_worker.state["policy"], kc,
-            speed=run_cfg.collect_speed)
+            speed=run_cfg.collect_speed,
+            mesh=roles.collector if roles else None)
         self.model_worker = ModelLearningWorker(
             ens_cfg, self.data_server, self.model_server, km,
             ema_weight=run_cfg.ema_weight, early_stop=run_cfg.early_stop,
-            min_trajs=run_cfg.min_warmup_trajs)
+            min_trajs=run_cfg.min_warmup_trajs,
+            mesh=roles.model if roles else None,
+            batch_axis=roles.axis if roles else None)
         self.recorder = _Recorder(env, run_cfg.eval_rollouts)
 
     # ------------------------------------------------------------- event

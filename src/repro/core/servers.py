@@ -37,6 +37,12 @@ class ParameterServer:
     Values stay on device. ``push`` snapshots leaves with a device-side
     copy so published versions are isolated from training buffers that
     the pusher later donates back into its jitted update step.
+
+    Placement-aware (role meshes, core/roles.py): ``push`` records the
+    source sharding; ``pull_if_newer(version, sharding=...)`` moves the
+    value onto the puller's sub-mesh with an explicit device-to-device
+    ``device_put`` — only on a version change, and only when the source
+    placement differs. The unchanged path stays one lock + int compare.
     """
 
     def __init__(self, initial=None):
@@ -45,6 +51,8 @@ class ParameterServer:
         # from buffers the caller may later donate into a jit
         self._value = None if initial is None else self._snapshot(initial)
         self._version = 0 if initial is None else 1
+        self._src_sharding = (None if self._value is None
+                              else self._leaf_sharding(self._value))
 
     @staticmethod
     def _snapshot(value):
@@ -52,10 +60,22 @@ class ParameterServer:
         # stored version from donate_argnums buffer reuse by the pusher.
         return jax.tree.map(jnp.copy, value)
 
+    @staticmethod
+    def _leaf_sharding(value):
+        """Sharding of the pushed pytree (first jax leaf; one pytree holds
+        one role's params, so leaves share a placement)."""
+        for leaf in jax.tree.leaves(value):
+            s = getattr(leaf, "sharding", None)
+            if s is not None:
+                return s
+        return None
+
     def push(self, value) -> int:
         snap = self._snapshot(value)    # copy outside the lock
+        src = self._leaf_sharding(snap)
         with self._lock:
             self._value = snap
+            self._src_sharding = src
             self._version += 1
             return self._version
 
@@ -64,15 +84,27 @@ class ParameterServer:
         with self._lock:
             return self._value, self._version
 
-    def pull_if_newer(self, version: int):
+    def pull_if_newer(self, version: int, *, sharding=None):
         """Version-gated pull: returns (value, current_version) when the
         server holds something newer than ``version``, else
         (None, current_version). The unchanged path is one lock + int
-        compare — no copies, no pytree traversal."""
+        compare — no copies, no pytree traversal (and therefore no
+        transfer of any kind: it passes jax.transfer_guard('disallow')).
+
+        ``sharding``: the puller's target placement (e.g. params
+        replicated over its role sub-mesh). Applied only on a version
+        change, and skipped when the pusher already produced that
+        placement — cross-role movement is a device-to-device
+        ``device_put``, never a host round-trip."""
         with self._lock:
             if self._version == version or self._value is None:
                 return None, self._version
-            return self._value, self._version
+            value, ver, src = self._value, self._version, self._src_sharding
+        if sharding is not None and src != sharding:
+            # outside the lock: value is an immutable snapshot; one
+            # pytree-aware device_put batches all leaf transfers
+            value = jax.device_put(value, sharding)
+        return value, ver
 
     def pull_host(self):
         """Host-materialised pull for checkpoint / serving boundaries —
@@ -125,13 +157,15 @@ class DataServer:
 
 
 # --------------------------------------------------------------------- ring
-@partial(jax.jit, donate_argnums=(0,))
-def _ring_write(storage, traj, cursor):
+def _ring_write_impl(storage, traj, cursor):
     """Scatter one trajectory into the ring at ``cursor`` (wraps)."""
     h = jax.tree.leaves(traj)[0].shape[0]
     cap = jax.tree.leaves(storage)[0].shape[0]
     idx = (cursor + jnp.arange(h)) % cap
     return jax.tree.map(lambda buf, t: buf.at[idx].set(t), storage, traj)
+
+
+_ring_write = jax.jit(_ring_write_impl, donate_argnums=(0,))
 
 
 class ReplayBuffer:
@@ -145,10 +179,33 @@ class ReplayBuffer:
     ring cursor. ``train_view``/``val_view`` return the full-capacity
     arrays plus the count of valid rows — consumers sample/mask against
     that count, so their compiled shapes never change as data accumulates.
+
+    ``sharding`` (role meshes, core/roles.py): a ``NamedSharding`` that
+    shards the transition (leading) axis over the owning worker's
+    sub-mesh. Storage is allocated PRE-SHARDED, incoming trajectories are
+    replicated onto the sub-mesh before the scatter, and the ring write is
+    compiled once with the storage's own ``out_shardings`` — so
+    ``_ring_write`` and any trainer fed from ``train_view`` stay
+    compile-once exactly as on a single device. Capacities are rounded up
+    to the shard count (``jax.device_put`` rejects uneven shards).
     """
 
     def __init__(self, capacity: int, *, val_capacity: Optional[int] = None,
-                 holdout_frac: float = 0.2):
+                 holdout_frac: float = 0.2, sharding=None):
+        self._sharding = sharding
+        if sharding is not None:
+            from repro.core.roles import num_shards, replicated, round_up
+            nsh = num_shards(sharding)
+            capacity = round_up(capacity, nsh)
+            val_capacity = round_up(
+                max(int(capacity) // 4, 1) if val_capacity is None
+                else val_capacity, nsh)
+            self._traj_sharding = replicated(sharding.mesh)
+            self._write = jax.jit(_ring_write_impl, donate_argnums=(0,),
+                                  out_shardings=sharding)
+        else:
+            self._traj_sharding = None
+            self._write = _ring_write
         self.capacity = int(capacity)
         self.val_capacity = int(val_capacity if val_capacity is not None
                                 else max(capacity // 4, 1))
@@ -166,7 +223,10 @@ class ReplayBuffer:
     def _alloc(self, traj) -> None:
         def zeros(t, cap):
             t = jnp.asarray(t)
-            return jnp.zeros((cap,) + t.shape[1:], t.dtype)
+            z = jnp.zeros((cap,) + t.shape[1:], t.dtype)
+            if self._sharding is not None:
+                z = jax.device_put(z, self._sharding)
+            return z
         self._train = {k: zeros(v, self.capacity) for k, v in traj.items()}
         if self._every:     # holdout_frac == 0 never writes the val ring
             self._val = {k: zeros(v, self.val_capacity)
@@ -189,15 +249,19 @@ class ReplayBuffer:
         self._trajs += 1
         h = int(jax.tree.leaves(traj)[0].shape[0])
         traj = {k: jnp.asarray(v) for k, v in traj.items()}
+        if self._traj_sharding is not None:
+            # cross-role ingestion: replicate the trajectory onto the
+            # owning sub-mesh (explicit device->device, no host hop)
+            traj = jax.device_put(traj, self._traj_sharding)
         if self._every and self._trajs % self._every == 0:
             traj, h = self._fit(traj, h, self.val_capacity)
-            self._val = _ring_write(self._val, traj,
+            self._val = self._write(self._val, traj,
                                     self._val_cursor % self.val_capacity)
             self._val_cursor = (self._val_cursor + h) % self.val_capacity
             self._val_written += h
         else:
             traj, h = self._fit(traj, h, self.capacity)
-            self._train = _ring_write(self._train, traj,
+            self._train = self._write(self._train, traj,
                                       self._cursor % self.capacity)
             self._cursor = (self._cursor + h) % self.capacity
             self._written += h

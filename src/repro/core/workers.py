@@ -12,6 +12,13 @@ benchmarks/hotpath.py):
 * parameter pulls are version-gated: an unchanged version costs one lock
   + integer compare against a device-resident cache — no host copy, no
   re-upload.
+
+Role meshes (core/roles.py): every worker takes an optional ``mesh`` —
+its sub-mesh of the pod. Params live replicated on the owning sub-mesh,
+batch-like data is sharded along its leading axis, and cross-role
+movement happens only through the placement-aware servers (explicit
+device-to-device ``device_put`` on version change). ``mesh=None`` is the
+single-device behaviour, bit-for-bit unchanged.
 """
 from __future__ import annotations
 
@@ -21,6 +28,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import roles as ROLES
 from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
@@ -45,7 +53,7 @@ class DataCollectionWorker:
 
     def __init__(self, env, policy_server: ParameterServer,
                  data_server: DataServer, init_policy_params, key,
-                 *, speed: float = 1.0):
+                 *, speed: float = 1.0, mesh=None):
         self.env = env
         self.policy_server = policy_server
         self.data_server = data_server
@@ -54,12 +62,20 @@ class DataCollectionWorker:
         self._policy_ver = 0
         self.speed = speed  # >1: faster collection (Fig. 5b)
         self.collected = 0
+        # the collector is a sequential control loop (the robot): it runs
+        # on ONE device of its sub-mesh; pulls land there directly
+        self._sharding = None
+        if mesh is not None:
+            self._sharding = jax.sharding.SingleDeviceSharding(
+                mesh.devices.flat[0])
+            self._policy_cache = jax.device_put(self._policy_cache,
+                                                self._sharding)
         self._rollout = jax.jit(
             lambda p, k: env.rollout(k, PI.sample_action, p))
 
     def step(self) -> float:
         fresh, self._policy_ver = self.policy_server.pull_if_newer(
-            self._policy_ver)                           # Pull (gated)
+            self._policy_ver, sharding=self._sharding)  # Pull (gated)
         if fresh is not None:
             self._policy_cache = fresh
         self._key, k = jax.random.split(self._key)
@@ -81,7 +97,8 @@ class ModelLearningWorker:
     def __init__(self, ens_cfg: DYN.EnsembleConfig,
                  data_server: DataServer, model_server: ParameterServer,
                  key, *, max_trajs: int = 200, ema_weight: float = 0.9,
-                 early_stop: bool = True, min_trajs: int = 4):
+                 early_stop: bool = True, min_trajs: int = 4,
+                 mesh=None, batch_axis: Optional[str] = None):
         self.cfg = ens_cfg
         self.data_server = data_server
         self.model_server = model_server
@@ -89,6 +106,13 @@ class ModelLearningWorker:
         self.buffer: Optional[ReplayBuffer] = None    # lazy: needs horizon
         self._key, k0 = jax.random.split(key)
         self.params = DYN.init_ensemble(ens_cfg, k0)
+        # role sub-mesh: ensemble trains data-parallel — ring storage
+        # sharded over the batch axis, params/opt_state replicated
+        self._repl = self._batch_shard = None
+        if mesh is not None:
+            self._repl = ROLES.replicated(mesh)
+            self._batch_shard = ROLES.batch_sharded(mesh, batch_axis)
+            self.params = jax.device_put(self.params, self._repl)
         self._train_epoch = None
         self._val_loss = None
         self._update_norm = None
@@ -106,9 +130,12 @@ class ModelLearningWorker:
             return
         horizon = int(jax.tree.leaves(traj)[0].shape[0])
         capacity = self.max_trajs * horizon
-        self.buffer = ReplayBuffer(capacity)
+        # ReplayBuffer rounds a sharded capacity up to the shard count
+        # itself; read the final value back for the trainer's grid
+        self.buffer = ReplayBuffer(capacity, sharding=self._batch_shard)
         opt, self._train_epoch, self._val_loss, self._update_norm = \
-            DYN.make_ring_trainer(self.cfg, capacity)
+            DYN.make_ring_trainer(self.cfg, self.buffer.capacity,
+                                  batch_sharding=self._batch_shard)
         self.opt_state = opt.init(self.params)
 
     def _refresh_data(self) -> bool:
@@ -155,12 +182,22 @@ class PolicyImprovementWorker:
     costs one lock + integer compare."""
 
     def __init__(self, algo, policy_server: ParameterServer,
-                 model_server: ParameterServer, key):
+                 model_server: ParameterServer, key, *, mesh=None,
+                 batch_axis: Optional[str] = None):
         self.algo = algo
         self.policy_server = policy_server
         self.model_server = model_server
         self._key, k0 = jax.random.split(key)
+        # role sub-mesh: imagination rollouts + TRPO batch statistics are
+        # sharded over the policy sub-mesh; policy/model params replicated
+        self._repl = None
+        if mesh is not None:
+            self._repl = ROLES.replicated(mesh)
+            if hasattr(algo, "configure_mesh"):
+                algo.configure_mesh(mesh, batch_axis)
         self.state = algo.init(k0)
+        if self._repl is not None:
+            self.state = jax.device_put(self.state, self._repl)
         self.policy_server.push(self.state["policy"])
         self._model_cache = None
         self._model_ver = 0
@@ -168,7 +205,7 @@ class PolicyImprovementWorker:
 
     def step(self) -> bool:
         fresh, self._model_ver = self.model_server.pull_if_newer(
-            self._model_ver)                            # Pull (gated)
+            self._model_ver, sharding=self._repl)       # Pull (gated)
         if fresh is not None:
             self._model_cache = fresh
         if self._model_cache is None:

@@ -266,6 +266,27 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
+def dryrun_roles(*, multi_pod: bool = False,
+                 ratios=(1, 2, 1), verbose: bool = True) -> dict:
+    """Role-split sanity for the async MBRL pod path: split the
+    production mesh into collector/model/policy sub-meshes
+    (core/roles.py) and report their shapes and the role shardings the
+    workers would jit against. Pure mesh bookkeeping — nothing is
+    allocated (512 forced host devices stand in for the pod)."""
+    from repro.core.roles import batch_sharded, replicated, split_roles
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    roles = split_roles(mesh, ratios=tuple(ratios))
+    rec = {"mesh": "2x16x16" if multi_pod else "16x16",
+           "ratios": list(ratios), "roles": roles.describe(),
+           "model_batch_sharding":
+               str(batch_sharded(roles.model, roles.axis)),
+           "policy_param_sharding": str(replicated(roles.policy))}
+    if verbose:
+        print(json.dumps(rec, indent=1))
+    return rec
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -274,10 +295,20 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--roles", action="store_true",
+                    help="report the async-MBRL role split of the "
+                         "production mesh and exit")
+    ap.add_argument("--role-ratios", default="1,2,1")
     ap.add_argument("--out", default="dryrun_results.json")
     ap.add_argument("--resume", action="store_true",
                     help="skip combos already present in --out")
     args = ap.parse_args()
+
+    if args.roles:
+        dryrun_roles(multi_pod=args.multi_pod,
+                     ratios=tuple(int(x) for x in
+                                  args.role_ratios.split(",")))
+        return
 
     archs = registry.ARCH_IDS if (args.all or not args.arch) \
         else [registry.normalize(args.arch)]

@@ -8,23 +8,23 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """v5e pod meshes: 16x16 = 256 chips per pod; 2 pods = 512 chips."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+def _make_mesh(shape, axes):
     try:
         return jax.make_mesh(
             shape, axes,
             axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
-    except TypeError:  # older jax without axis_types kwarg
+    except (TypeError, AttributeError):
+        # older jax: no axis_types kwarg / no jax.sharding.AxisType
         return jax.make_mesh(shape, axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod meshes: 16x16 = 256 chips per pod; 2 pods = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _make_mesh(shape, axes)
 
 
 def make_smoke_mesh():
     """1x1 mesh for CPU smoke tests (same code path, trivial collectives)."""
-    try:
-        return jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    except TypeError:
-        return jax.make_mesh((1, 1), ("data", "model"))
+    return _make_mesh((1, 1), ("data", "model"))

@@ -24,6 +24,17 @@ import jax
 import jax.numpy as jnp
 
 
+def build_mesh(spec: str):
+    """``--mesh`` -> Mesh: "none" (single-device), "auto" (all local
+    devices on one ("data",) axis), or an explicit device count "8"
+    (errors if unavailable — combine with
+    XLA_FLAGS=--xla_force_host_platform_device_count=N on CPU)."""
+    if spec == "none":
+        return None
+    n = jax.device_count() if spec == "auto" else int(spec)
+    return jax.make_mesh((n,), ("data",))
+
+
 def run_mbrl(args):
     from repro.core import (AsyncTrainer, PartialAsyncDataPolicy,
                             PartialAsyncModelPolicy, RunConfig,
@@ -32,6 +43,11 @@ def run_mbrl(args):
     from repro.mbrl import (AlgoConfig, EnsembleConfig, PolicyConfig,
                             make_algo)
 
+    mesh = build_mesh(args.mesh)
+    role_ratios = tuple(int(x) for x in args.role_ratios.split(","))
+    if mesh is not None and args.engine != "async":
+        raise SystemExit("--mesh is only supported by --engine async "
+                         "(role meshes belong to the async engine)")
     env = make_env(args.env)
     ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=args.model_hidden,
                          n_models=args.n_models)
@@ -45,7 +61,8 @@ def run_mbrl(args):
                    ema_weight=args.ema_weight,
                    early_stop=not args.no_early_stop)
     engines = {
-        "async": lambda: AsyncTrainer(env, ens, algo, rc, mode=args.mode),
+        "async": lambda: AsyncTrainer(env, ens, algo, rc, mode=args.mode,
+                                      mesh=mesh, role_ratios=role_ratios),
         "sequential": lambda: SequentialTrainer(env, ens, algo, rc),
         "partial-model": lambda: PartialAsyncModelPolicy(env, ens, algo, rc),
         "partial-data": lambda: PartialAsyncDataPolicy(env, ens, algo, rc),
@@ -55,6 +72,8 @@ def run_mbrl(args):
     trace = tr.run()
     out = {"engine": args.engine, "algo": args.algo, "env": args.env,
            "real_seconds": round(time.time() - t0, 1), "trace": trace}
+    if getattr(tr, "roles", None) is not None:
+        out["roles"] = tr.roles.describe()
     print(json.dumps(out["trace"][-1], indent=1))
     if args.out:
         with open(args.out, "w") as f:
@@ -120,6 +139,11 @@ def main():
     ap.add_argument("--collect-speed", type=float, default=1.0)
     ap.add_argument("--ema-weight", type=float, default=0.9)
     ap.add_argument("--no-early-stop", action="store_true")
+    ap.add_argument("--mesh", default="none",
+                    help="none | auto | <device count>: role-shard the "
+                         "async engine over a device mesh (core/roles.py)")
+    ap.add_argument("--role-ratios", default="1,2,1",
+                    help="collector,model,policy share of the mesh axis")
     ap.add_argument("--out", default=None)
     # lm
     ap.add_argument("--arch", default="glm4-9b")

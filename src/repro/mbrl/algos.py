@@ -86,11 +86,36 @@ def _flat_batch(obs, pre, rew, gamma):
     return {"obs": flat(obs), "act_pre": flat(pre), "adv": adv.reshape(-1)}
 
 
-class MEAlgo:
+class _MeshMixin:
+    """Shared role-mesh hook: ``configure_mesh`` pins imagined-rollout
+    batches (and everything downstream: advantages, TRPO statistics) to
+    the policy sub-mesh's batch axis. Params stay replicated — the worker
+    places them (core/workers.py). Without a mesh, ``_shard_batch`` is
+    the identity and the jitted step is unchanged."""
+
+    _batch_sharding = None
+
+    def configure_mesh(self, mesh, batch_axis: str | None = None) -> None:
+        from jax.sharding import NamedSharding, PartitionSpec
+        axis = batch_axis or mesh.axis_names[0]
+        self._batch_sharding = NamedSharding(mesh, PartitionSpec(axis))
+        # drop any traces compiled before the mesh was known
+        self._improve = jax.jit(self._improve_impl)
+
+    def _shard_batch(self, x):
+        if self._batch_sharding is None:
+            return x
+        return jax.tree.map(
+            lambda v: jax.lax.with_sharding_constraint(
+                v, self._batch_sharding), x)
+
+
+class MEAlgo(_MeshMixin):
     """ME-TRPO / ME-PPO policy improvement."""
 
     def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
-                 init_state_fn, *, predict_fn=None):
+                 init_state_fn, *, predict_fn=None, mesh=None,
+                 batch_axis=None):
         self.cfg = cfg
         self.pol_cfg = pol_cfg
         self.reward_fn = reward_fn
@@ -100,6 +125,8 @@ class MEAlgo:
         if cfg.algo == "me-ppo":
             self._ppo_opt, self._ppo_step = PPO.make_ppo_step(cfg.ppo_lr)
         self._improve = jax.jit(self._improve_impl)
+        if mesh is not None:
+            self.configure_mesh(mesh, batch_axis)
 
     def init(self, key):
         pol = PI.init_policy(self.pol_cfg, key)
@@ -111,11 +138,15 @@ class MEAlgo:
     def _improve_impl(self, state, model_params, key):
         cfg = self.cfg
         k0, k1 = jax.random.split(key)
-        s0 = self.init_state_fn(k0, cfg.imagine_batch)
+        # shard imagined starts over the policy sub-mesh: the rollout scan
+        # carries the batch dim, so imagination runs data-parallel
+        s0 = self._shard_batch(self.init_state_fn(k0, cfg.imagine_batch))
         obs, pre, rew = _rollout_with_logp(
             model_params, state["policy"], s0, k1, cfg.imagine_horizon,
             self.reward_fn, self.predict_fn)
-        batch = _flat_batch(obs, pre, rew, cfg.gamma)
+        # TRPO/PPO statistics (advantages, Fisher-vector products, line
+        # search) computed over the sharded flat batch
+        batch = self._shard_batch(_flat_batch(obs, pre, rew, cfg.gamma))
         info = {"imagined_return": rew.sum(0).mean()}
         if cfg.algo == "me-trpo":
             new_pol, tinfo = TRPO.trpo_step(state["policy"], batch,
@@ -135,15 +166,22 @@ class MEAlgo:
         return self._improve(state, model_params, key)
 
 
-class MBMPO:
+class MBMPO(_MeshMixin):
     """MB-MPO [4]: meta-policy optimization over the model ensemble.
 
     Inner loop: for each ensemble member m, adapt theta with one VPG step
     on imagined data from member m. Outer loop: PPO step on the
-    post-adaptation surrogate averaged over members."""
+    post-adaptation surrogate averaged over members.
+
+    On a role mesh the whole meta-step runs replicated over the policy
+    sub-mesh (params placement, core/workers.py); the per-member vmap
+    keeps its layout and batches are NOT constrained — constraining
+    inside the member vmap would fight the vmapped axis, so
+    ``_improve_impl`` simply never calls ``_shard_batch``."""
 
     def __init__(self, cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
-                 init_state_fn, *, predict_fn=None):
+                 init_state_fn, *, predict_fn=None, mesh=None,
+                 batch_axis=None):
         self.cfg = cfg
         self.pol_cfg = pol_cfg
         self.reward_fn = reward_fn
@@ -151,6 +189,8 @@ class MBMPO:
         self.predict_fn = predict_fn        # None = ensemble fast path
         self._outer_opt = adam(cfg.ppo_lr)
         self._improve = jax.jit(self._improve_impl)
+        if mesh is not None:
+            self.configure_mesh(mesh, batch_axis)
 
     def init(self, key):
         pol = PI.init_policy(self.pol_cfg, key)
@@ -215,14 +255,20 @@ class MBMPO:
 
 
 def make_algo(cfg: AlgoConfig, pol_cfg: PI.PolicyConfig, reward_fn,
-              init_state_fn, *, predict_fn=None):
+              init_state_fn, *, predict_fn=None, mesh=None,
+              batch_axis=None):
     """``predict_fn=None`` -> ensemble sample-then-compute fast path;
     any ``(params, obs, act, key)`` callable swaps the world model for
-    every algorithm (ME-* and MB-MPO alike)."""
+    every algorithm (ME-* and MB-MPO alike). ``mesh``: policy role
+    sub-mesh (core/roles.py) to shard imagination/TRPO batches over —
+    usually left None and configured by the engine via
+    ``algo.configure_mesh``."""
     if cfg.algo in ("me-trpo", "me-ppo"):
         return MEAlgo(cfg, pol_cfg, reward_fn, init_state_fn,
-                      predict_fn=predict_fn)
+                      predict_fn=predict_fn, mesh=mesh,
+                      batch_axis=batch_axis)
     if cfg.algo == "mb-mpo":
         return MBMPO(cfg, pol_cfg, reward_fn, init_state_fn,
-                     predict_fn=predict_fn)
+                     predict_fn=predict_fn, mesh=mesh,
+                     batch_axis=batch_axis)
     raise ValueError(cfg.algo)

@@ -139,7 +139,7 @@ def mse_loss(params, obs, act, next_obs):
 
 
 def _sgd_epoch_scan(opt, params, opt_state, obs, act, next_obs, batches,
-                    n_active=None):
+                    n_active=None, shard_batch=None):
     """Scan minibatch SGD over precomputed (nb, bs) index batches —
     shared by the legacy and ring trainers.
 
@@ -148,11 +148,17 @@ def _sgd_epoch_scan(opt, params, opt_state, obs, act, next_obs, batches,
     batches are skipped at runtime via lax.cond (one branch executes in
     an un-vmapped scan), so a ring trainer's static grid does
     epoch-proportional work on a partially filled buffer and full grid
-    work only at steady state."""
+    work only at steady state.
+
+    ``shard_batch`` (optional, x -> x): sharding constraint applied to
+    each gathered minibatch — the data-parallel hook for role sub-meshes
+    (params replicated, per-device grads, XLA inserts the psum)."""
 
     def sgd(p, o, idx):
-        loss, g = jax.value_and_grad(mse_loss)(
-            p, obs[idx], act[idx], next_obs[idx])
+        mb = (obs[idx], act[idx], next_obs[idx])
+        if shard_batch is not None:
+            mb = tuple(shard_batch(x) for x in mb)
+        loss, g = jax.value_and_grad(mse_loss)(p, *mb)
         upd, o = opt.update(g, o, p)
         return apply_updates(p, upd), o, loss
 
@@ -220,7 +226,8 @@ def masked_norm_stats(obs, act, next_obs, size):
 
 def make_ring_trainer(cfg: EnsembleConfig, capacity: int,
                       *, epoch_batches: int | None = None,
-                      max_epoch_batches: int = 64):
+                      max_epoch_batches: int = 64,
+                      batch_sharding=None):
     """Retrace-free trainer over fixed-capacity ring storage.
 
     All three returned functions close over STATIC shapes only
@@ -242,11 +249,22 @@ def make_ring_trainer(cfg: EnsembleConfig, capacity: int,
     ``train_epoch`` and ``val_loss`` carry a ``.trace_count`` attribute
     (see repro.utils.jit_stats) so benchmarks/tests can assert the
     no-retrace invariant.
+
+    ``batch_sharding`` (role meshes): a ``NamedSharding`` over the owning
+    sub-mesh's batch axis. Ring storage arrives pre-sharded from
+    :class:`repro.core.servers.ReplayBuffer`; each gathered minibatch is
+    constrained to the same sharding so the SGD step runs data-parallel
+    (params replicated, per-device grads psum'd by XLA). Same math, same
+    compile-once guarantee.
     """
     opt = adam(cfg.lr)
     bs = min(cfg.train_batch, max(int(capacity), 1))
     nb = epoch_batches if epoch_batches is not None else \
         min(max(int(capacity) // bs, 1), max_epoch_batches)
+    shard_batch = None
+    if batch_sharding is not None:
+        shard_batch = lambda x: jax.lax.with_sharding_constraint(
+            x, batch_sharding)
 
     def _train_epoch(params, opt_state, data, size, key):
         idx = jax.random.randint(key, (nb, bs), 0,
@@ -256,7 +274,7 @@ def make_ring_trainer(cfg: EnsembleConfig, capacity: int,
         n_active = jnp.clip(size // bs, 1, nb)
         return _sgd_epoch_scan(opt, params, opt_state, data["obs"],
                                data["act"], data["next_obs"], idx,
-                               n_active=n_active)
+                               n_active=n_active, shard_batch=shard_batch)
 
     def _val_loss(params, data, size):
         w = jnp.arange(data["obs"].shape[0]) < size

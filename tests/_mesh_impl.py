@@ -1,0 +1,320 @@
+"""Role-sharded engine, end-to-end on a forced multi-device CPU mesh.
+
+This module REQUIRES 8 host-platform devices and therefore must run in
+its own process:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m pytest -q tests/_mesh_impl.py        # or: make test-mesh
+
+The filename deliberately avoids the ``test_*`` pattern so a plain
+``pytest`` run never collects it in-process (the device count locks on
+first backend use — forcing 8 devices here would leak into every other
+module). ``tests/test_mesh.py`` is the wrapper that spawns this file in a
+subprocess with the right flags, so the tier-1 suite still covers it.
+
+What is proven here (the sharded-execution invariants, ROADMAP):
+
+* sharded vs single-device ``train_epoch`` / ``imagine_rollout`` agree
+  numerically (same math, XLA inserts the psums);
+* no retrace after warmup in sharded mode (pre-sharded ring storage,
+  compile-once trainers);
+* a threads-mode ``AsyncTrainer`` on an (8,) mesh split (1,2,1) runs to
+  completion with a sane trace;
+* the unchanged ``pull_if_newer`` path performs zero transfers of any
+  kind (passes ``jax.transfer_guard("disallow")``), and the changed path
+  lands params on the puller's sub-mesh.
+"""
+import os
+
+_FLAG = "--xla_force_host_platform_device_count"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    # must happen before the first jax backend init in this process
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FLAG}=8").strip()
+
+import itertools
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+if jax.device_count() < 8:
+    pytest.skip("needs 8 host devices (run via make test-mesh or "
+                "tests/test_mesh.py)", allow_module_level=True)
+
+from repro.core import AsyncTrainer, RunConfig
+from repro.core.roles import (batch_sharded, num_shards, replicated,
+                              split_roles)
+from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
+from repro.core.workers import ModelLearningWorker
+from repro.envs import make_env
+from repro.mbrl import (AlgoConfig, EnsembleConfig, PolicyConfig, dynamics
+                        as DYN, make_algo)
+from repro.mbrl import policy as PI
+from repro.utils.jit_stats import trace_counted
+
+
+def _mesh8() -> Mesh:
+    return jax.make_mesh((8,), ("data",))
+
+
+def _traj(i, h=8, d=3, a=1):
+    k = jax.random.fold_in(jax.random.key(7), i)
+    obs = jax.random.normal(k, (h, d))
+    act = jax.random.normal(jax.random.fold_in(k, 1), (h, a))
+    return {"obs": obs, "act": act, "next_obs": obs + 0.1 * act.sum(-1,
+            keepdims=True)}
+
+
+def _host(x):
+    return np.asarray(jax.device_put(x, jax.devices()[0]))
+
+
+# ------------------------------------------------------------ split_roles
+def test_split_roles_partitions_disjoint():
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    sizes = [m.devices.size for m in (roles.collector, roles.model,
+                                      roles.policy)]
+    assert sizes == [2, 4, 2]
+    assert not roles.shared
+    ids = [frozenset(d.id for d in m.devices.flat)
+           for m in (roles.collector, roles.model, roles.policy)]
+    assert len(ids[0] | ids[1] | ids[2]) == 8
+    for a, b in itertools.combinations(ids, 2):
+        assert not (a & b), "role sub-meshes must be disjoint"
+
+
+@pytest.mark.parametrize("n", [1, 2])
+def test_split_roles_degenerate_falls_back_shared(n):
+    """Fewer devices than roles on the split axis: every role gets the
+    FULL mesh (the rounding loop used to build an empty sub-mesh)."""
+    mesh = Mesh(np.array(jax.devices()[:n]), ("data",))
+    with pytest.warns(UserWarning, match="shared sub-meshes"):
+        roles = split_roles(mesh, ratios=(1, 2, 1))
+    assert roles.shared
+    for m in (roles.collector, roles.model, roles.policy):
+        assert m.devices.size == n, "shared fallback must keep the mesh"
+
+
+@pytest.mark.parametrize("ratios",
+                         sorted(set(itertools.permutations((1, 2, 1)))) +
+                         [(1, 1, 1), (5, 1, 1), (1, 6, 1)])
+@pytest.mark.parametrize("n", [3, 4, 8])
+def test_split_roles_ratio_permutations_cover_mesh(n, ratios):
+    mesh = Mesh(np.array(jax.devices()[:n]), ("data",))
+    roles = split_roles(mesh, ratios=ratios)
+    sizes = [m.devices.size for m in (roles.collector, roles.model,
+                                      roles.policy)]
+    assert all(s >= 1 for s in sizes), sizes
+    assert sum(sizes) == n, sizes
+
+
+def test_split_roles_skips_too_small_leading_axis():
+    """Multi-pod shape: a (2, 4) mesh has only 2 devices on its leading
+    'pod' axis — the default split must move to the 4-wide 'data' axis
+    and produce a REAL partition, not the shared fallback."""
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
+    roles = split_roles(mesh, ratios=(1, 2, 1))
+    assert not roles.shared
+    shapes = [m.devices.shape for m in (roles.collector, roles.model,
+                                        roles.policy)]
+    assert shapes == [(2, 1), (2, 2), (2, 1)], shapes
+    # an EXPLICIT too-small axis still falls back (and warns)
+    with pytest.warns(UserWarning, match="shared sub-meshes"):
+        assert split_roles(mesh, ratios=(1, 2, 1), axis="pod").shared
+
+
+def test_workers_shard_along_the_split_axis():
+    """On a multi-axis mesh the engine must shard batches along the axis
+    the split was actually carved on (roles.axis), not axis_names[0]."""
+    mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
+    env = make_env("pendulum")
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=8, n_models=2)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=8)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=5,
+                      n_models=2)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=1, seed=0),
+                      mesh=mesh, role_ratios=(1, 2, 1))
+    assert tr.roles.axis == "data" and not tr.roles.shared
+    assert tr.model_worker._batch_shard.spec == P("data")
+    assert algo._batch_sharding.spec == P("data")
+
+
+# ------------------------------------------- (a) numerical equivalence
+def _train_n_epochs(sharding, batch_sharding, n_epochs=4):
+    cfg = EnsembleConfig(obs_dim=3, act_dim=1, hidden=16, n_models=2,
+                         train_batch=16)
+    key = jax.random.key(0)
+    params = DYN.init_ensemble(cfg, key)
+    capacity = 64
+    rb = ReplayBuffer(capacity, holdout_frac=0.0, sharding=sharding)
+    assert rb.capacity == capacity          # 64 already a multiple of 4
+    opt, train_epoch, val_loss, update_norm = DYN.make_ring_trainer(
+        cfg, rb.capacity, batch_sharding=batch_sharding)
+    if sharding is not None:
+        params = jax.device_put(params, replicated(sharding.mesh))
+    opt_state = opt.init(params)
+    for i in range(6):
+        rb.add_traj(_traj(i))
+    losses = []
+    for e in range(n_epochs):
+        data, size = rb.train_view()
+        params = {**params, "norm": update_norm(data, size)}
+        params, opt_state, loss = train_epoch(
+            params, opt_state, data, size, jax.random.fold_in(key, e))
+        losses.append(float(loss))
+    data, size = rb.train_view()
+    vloss = float(val_loss(params, data, size))
+    return params, losses, vloss, train_epoch
+
+
+def test_sharded_train_epoch_matches_single_device():
+    """Data-parallel ring training over the model sub-mesh computes the
+    same epochs as one device: same minibatch draws (replicated RNG),
+    per-device grads psum'd by XLA."""
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    sh = batch_sharded(roles.model)
+    assert num_shards(sh) == 4
+    p1, l1, v1, _ = _train_n_epochs(None, None)
+    p2, l2, v2, _ = _train_n_epochs(sh, sh)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=2e-5, atol=1e-6)
+    np.testing.assert_allclose(v1, v2, rtol=2e-5, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(_host(a), _host(b),
+                                   rtol=2e-5, atol=1e-6)
+
+
+def test_sharded_imagine_rollout_matches_single_device():
+    """Imagination with s0 sharded over the policy sub-mesh returns the
+    same trajectories as the single-device rollout (tolerance: psum
+    reduction order)."""
+    env = make_env("pendulum")
+    cfg = EnsembleConfig(env.obs_dim, env.act_dim, hidden=16, n_models=3)
+    key = jax.random.key(1)
+    params = DYN.init_ensemble(cfg, key)
+    pol = PI.init_policy(PolicyConfig(env.obs_dim, env.act_dim, hidden=8),
+                         key)
+    s0 = env.reset_batch(key, 16)
+    reward_fn = jax.vmap(env.reward)
+    roll = jax.jit(lambda mp, pp, s, k: DYN.imagine_rollout(
+        mp, PI.sample_action, pp, s, k, 12, reward_fn))
+    single = roll(params, pol, s0, jax.random.key(2))
+
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    sh = batch_sharded(roles.policy)
+    rp = replicated(roles.policy)
+    sharded = roll(jax.device_put(params, rp), jax.device_put(pol, rp),
+                   jax.device_put(s0, sh), jax.random.key(2))
+    for k in ("obs", "act", "rew"):
+        np.testing.assert_allclose(_host(single[k]), _host(sharded[k]),
+                                   rtol=2e-5, atol=1e-6)
+        assert single[k].shape == sharded[k].shape
+
+
+# --------------------------------------------------- (b) no retrace
+def test_sharded_no_retrace_after_warmup():
+    """The sharded model worker keeps the compile-once guarantee while
+    its (pre-sharded) ring fills, wraps and evicts."""
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    cfg = EnsembleConfig(obs_dim=3, act_dim=1, hidden=16, n_models=2,
+                         train_batch=16)
+    ds, ms = DataServer(), ParameterServer()
+    mw = ModelLearningWorker(cfg, ds, ms, jax.random.key(0), max_trajs=6,
+                             early_stop=False, min_trajs=2,
+                             mesh=roles.model)
+    for i in range(10):                     # grows past capacity -> wraps
+        ds.push(_traj(i))
+        mw.step()
+    assert mw.epochs >= 8
+    assert mw._train_epoch.trace_count == 1, \
+        f"sharded train_epoch retraced {mw._train_epoch.trace_count - 1}x"
+    storage, _ = mw.buffer.train_view()
+    assert all(v.sharding.is_equivalent_to(
+        batch_sharded(roles.model), v.ndim) for v in storage.values()), \
+        "ring storage must stay sharded across writes"
+
+
+def test_sharded_imagination_no_retrace():
+    """Sharded sample-then-compute rollout: one compile across fresh keys
+    and updated params (the sharding constraint must not leak dynamic
+    shapes)."""
+    env = make_env("pendulum")
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    sh = batch_sharded(roles.policy)
+    rp = replicated(roles.policy)
+    cfg = EnsembleConfig(env.obs_dim, env.act_dim, hidden=16, n_models=3)
+    params = jax.device_put(DYN.init_ensemble(cfg, jax.random.key(0)), rp)
+    pol = jax.device_put(
+        PI.init_policy(PolicyConfig(env.obs_dim, env.act_dim, hidden=8),
+                       jax.random.key(0)), rp)
+    s0 = jax.device_put(env.reset_batch(jax.random.key(0), 16), sh)
+    reward_fn = jax.vmap(env.reward)
+    roll = trace_counted(lambda mp, pp, s, k: DYN.imagine_rollout(
+        mp, PI.sample_action, pp, s, k, 10, reward_fn))
+    for i in range(4):
+        params = jax.tree.map(lambda x: x * 1.01, params)
+        out = roll(params, pol, s0, jax.random.fold_in(jax.random.key(3),
+                                                       i))
+        assert bool(jnp.isfinite(out["rew"]).all())
+    assert roll.trace_count == 1, \
+        f"sharded imagination retraced {roll.trace_count - 1}x"
+
+
+# ------------------------------------------- (c) threads-mode end-to-end
+def test_threads_mode_role_split_completes():
+    """Full async engine, real threads, 8-device (1,2,1) role split."""
+    env = make_env("pendulum")
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=16, n_models=2)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=8)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=10,
+                      n_models=2)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    tr = AsyncTrainer(env, ens, algo,
+                      RunConfig(total_trajs=3, seed=0, min_warmup_trajs=2),
+                      mode="threads", mesh=_mesh8(), role_ratios=(1, 2, 1))
+    assert tr.roles is not None and not tr.roles.shared
+    assert tr.roles.model.devices.size == 4
+    trace = tr.run()
+    assert tr.collector.collected >= 3
+    assert trace and trace[-1]["trajs"] >= 3
+    times = [r["time"] for r in trace]
+    assert times == sorted(times), times
+    assert all(0.0 <= t < 600.0 for t in times), times
+    assert all(np.isfinite(r["eval_return"]) for r in trace)
+    # params ended up on the right sub-meshes
+    model_devs = {d.id for d in tr.roles.model.devices.flat}
+    stored, _ = tr.model_server.pull()
+    if stored is not None:
+        leaf = jax.tree.leaves(stored)[0]
+        assert {d.id for d in leaf.sharding.device_set} <= model_devs
+
+
+# ------------------------------------- (d) zero-transfer unchanged pull
+def test_pull_if_newer_cross_mesh_placement_and_no_transfer():
+    roles = split_roles(_mesh8(), ratios=(1, 2, 1))
+    rm, rp = replicated(roles.model), replicated(roles.policy)
+    ps = ParameterServer()
+    params = jax.device_put({"w": jnp.ones((32, 32)),
+                             "b": jnp.zeros((32,))}, rm)
+    ver = ps.push(params)
+    # changed path: value re-device_put onto the puller's sub-mesh
+    val, got = ps.pull_if_newer(0, sharding=rp)
+    assert got == ver
+    policy_devs = {d.id for d in roles.policy.devices.flat}
+    for leaf in jax.tree.leaves(val):
+        assert {d.id for d in leaf.sharding.device_set} == policy_devs
+    # unchanged path: one lock + int compare — NO transfer of any kind
+    with jax.transfer_guard("disallow"):
+        for _ in range(32):
+            none_val, got2 = ps.pull_if_newer(ver, sharding=rp)
+            assert none_val is None and got2 == ver
+    # same-placement pull skips the device_put entirely
+    val2, _ = ps.pull_if_newer(0, sharding=rm)
+    stored, _ = ps.pull()
+    assert all(a is b for a, b in zip(jax.tree.leaves(val2),
+                                      jax.tree.leaves(stored)))

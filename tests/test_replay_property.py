@@ -1,0 +1,94 @@
+"""Property-based tests: ReplayBuffer vs a pure-python FIFO ring oracle.
+
+The oracle mirrors the documented contract transition-by-transition
+(servers.ReplayBuffer): every ``1/holdout_frac``-th trajectory goes to
+the val ring; a trajectory longer than its ring keeps only the LAST
+``cap`` transitions; writes land at ``cursor % cap`` and wrap. Random
+trajectory-length sequences then check wrap-around ordering (exact slot
+layout, not just the surviving set), eviction, the val interleave
+fraction, and ``size``/``total_seen`` accounting."""
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core.servers import ReplayBuffer
+
+
+class _RingOracle:
+    """Plain-python FIFO ring: value v written at slot (cursor+t) % cap."""
+
+    def __init__(self, cap):
+        self.cap = cap
+        self.slots = [None] * cap
+        self.cursor = 0
+        self.written = 0
+
+    def write(self, values):
+        values = values[-self.cap:]          # traj > cap: keep the LAST cap
+        for t, v in enumerate(values):
+            self.slots[(self.cursor + t) % self.cap] = v
+        self.cursor = (self.cursor + len(values)) % self.cap
+        self.written += len(values)
+
+    @property
+    def size(self):
+        return min(self.written, self.cap)
+
+
+def _check_against_oracle(lengths, cap, frac):
+    rb = ReplayBuffer(cap, holdout_frac=frac)
+    every = max(int(round(1 / frac)), 2) if frac > 0 else 0
+    train_oracle = _RingOracle(cap)
+    val_oracle = _RingOracle(rb.val_capacity)
+    for i, h in enumerate(lengths):
+        vals = [i * 1000.0 + t for t in range(h)]
+        rb.add_traj({"obs": jnp.asarray(vals)[:, None]})
+        (val_oracle if every and (i + 1) % every == 0
+         else train_oracle).write(vals)
+
+    assert rb.total_seen == len(lengths)
+    assert rb.size == train_oracle.size
+    assert rb.val_size == val_oracle.size
+    for ring, oracle in ((rb.train_view, train_oracle),
+                         (rb.val_view, val_oracle)):
+        data, size = ring()
+        if data is None:
+            assert oracle.written == 0
+            continue
+        got = np.asarray(data["obs"])[:, 0]
+        for slot, expect in enumerate(oracle.slots):
+            if expect is not None:     # untouched slots stay alloc zeros
+                assert got[slot] == expect, (
+                    f"slot {slot}: got {got[slot]}, want {expect} "
+                    f"(wrap-around ordering broken)")
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(1, 9), min_size=1, max_size=25),
+       st.integers(2, 12),
+       st.sampled_from([0.0, 0.2, 0.5]))
+def test_ring_matches_fifo_oracle(lengths, cap, frac):
+    _check_against_oracle(lengths, cap, frac)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 6), st.lists(st.integers(7, 30), min_size=1,
+                                   max_size=8))
+def test_traj_longer_than_capacity_keeps_last_cap(cap, lengths):
+    """Every trajectory here exceeds the ring: only the newest ``cap``
+    transitions of the latest writes may survive."""
+    _check_against_oracle(lengths, cap, 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(5, 60), st.sampled_from([0.1, 0.2, 0.25, 0.5]))
+def test_val_interleave_fraction(n_trajs, frac):
+    """Exactly every ``max(round(1/frac), 2)``-th trajectory is held out."""
+    rb = ReplayBuffer(1000, holdout_frac=frac)
+    for i in range(n_trajs):
+        rb.add_traj({"obs": jnp.full((2, 1), float(i))})
+    every = max(int(round(1 / frac)), 2)
+    n_val = n_trajs // every
+    assert rb.val_size == min(2 * n_val, rb.val_capacity)
+    assert rb.size == min(2 * (n_trajs - n_val), rb.capacity)
+    assert rb.total_seen == n_trajs

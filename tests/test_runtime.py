@@ -111,3 +111,79 @@ def test_stopping_criterion_total_trajs():
     tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=1))
     tr.run()
     assert tr.collector.collected == 4
+
+
+def test_event_engine_bit_identical_and_speed_stable():
+    """Regression harness for the paper's Fig. 5b machinery: the
+    discrete-event engine is DETERMINISTIC — two runs with the same
+    ``RunConfig.seed`` produce bit-identical traces — and its
+    virtual-time cursor ordering stays stable (monotone trace, final
+    virtual time scaling with 1/collect_speed) across collection
+    speeds."""
+    env = make_env("pendulum")
+    final_times = {}
+    for speed in (0.5, 1.0, 2.0):
+        traces = []
+        for _ in range(2):
+            ens, algo = build(env)
+            tr = AsyncTrainer(env, ens, algo,
+                              RunConfig(total_trajs=4, seed=3,
+                                        collect_speed=speed))
+            traces.append(tr.run())
+        assert traces[0] == traces[1], \
+            f"event engine non-deterministic at collect_speed={speed}"
+        times = [r["time"] for r in traces[0]]
+        assert times == sorted(times), times
+        final_times[speed] = times[-1]
+    # the virtual clock is exact: collection dominates run time, so the
+    # final cursor scales inversely with collection speed
+    assert final_times[0.5] > final_times[1.0] > final_times[2.0], \
+        final_times
+
+
+def test_eval_cache_bounded_and_clearable():
+    """_EVAL_CACHE shares one compiled eval across value-equal envs, is
+    LRU-bounded (env variant sweeps can't grow it without bound), and is
+    explicitly clearable for benchmarks."""
+    from repro.core import runtime
+    from repro.envs.classic import Pendulum
+
+    runtime.clear_eval_cache()
+    env = Pendulum(max_torque=1.875)        # value distinct from other tests
+    fn1 = runtime._eval_fn(env, 2)
+    assert runtime._eval_fn(Pendulum(max_torque=1.875), 2) is fn1, \
+        "value-equal envs must share one compiled eval"
+    assert runtime._eval_fn(env, 3) is not fn1
+    assert len(runtime._EVAL_CACHE) == 2
+    # sweep many env variants: the LRU bound holds and the most recently
+    # used entry survives
+    runtime._eval_fn(env, 2)                # touch -> fn1 becomes newest
+    for i in range(runtime._EVAL_CACHE_MAX + 5):
+        runtime._eval_fn(Pendulum(max_torque=3.0 + i), 2)
+    assert len(runtime._EVAL_CACHE) == runtime._EVAL_CACHE_MAX
+    assert (env, 3) not in runtime._EVAL_CACHE, "oldest entry must evict"
+    runtime.clear_eval_cache()
+    assert len(runtime._EVAL_CACHE) == 0
+
+
+def test_eval_cache_eviction_keeps_live_recorders_working():
+    """An LRU-evicted entry must strand nothing: a _Recorder built before
+    the eviction keeps its own fn and still evaluates."""
+    import jax
+    import numpy as np
+
+    from repro.core import runtime
+    from repro.envs.classic import Pendulum
+
+    runtime.clear_eval_cache()
+    env = Pendulum(max_torque=1.9375)
+    rec = runtime._Recorder(env, 2)
+    for i in range(runtime._EVAL_CACHE_MAX + 1):    # evict rec's entry
+        runtime._eval_fn(Pendulum(max_torque=5.0 + i), 2)
+    assert (env, 2) not in runtime._EVAL_CACHE
+    pol = runtime.PI.init_policy(
+        runtime.PI.PolicyConfig(env.obs_dim, env.act_dim, hidden=4),
+        jax.random.key(0))
+    ret = rec.record(0.0, 1, pol, jax.random.key(1))    # first trace here
+    assert np.isfinite(ret)
+    runtime.clear_eval_cache()
