@@ -1,30 +1,39 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-green test-mesh bench bench-hotpath bench-hotpath-sharded
+.PHONY: test test-mesh test-procs lint bench bench-hotpath bench-hotpath-sharded
 
 # Default aggregate = the multi-device mesh suite FIRST, then the tier-1
 # verify verbatim from ROADMAP.md. The mesh suite must run as its own
-# step: pytest's -x stops at the first of the known pre-existing
-# failures (test_arch_smoke/test_dryrun_small), which sort before
-# tests/test_mesh.py — relying on collection alone would silently skip
-# it. (tests/test_mesh.py itself re-runs tests/_mesh_impl.py in an
-# isolated 8-device subprocess: the XLA flag must never leak into an
+# step: pytest's -x would otherwise stop before collecting it.
+# (tests/test_mesh.py itself re-runs tests/_mesh_impl.py in an isolated
+# 8-device subprocess: the XLA flag must never leak into an
 # already-initialised jax process — device count locks on first use.)
 test: test-mesh
 	python -m pytest -x -q
-
-# the currently-green suite: everything except the two modules with
-# known pre-existing jax-version failures — use this to check a change
-test-green:
-	python -m pytest -q --ignore=tests/test_arch_smoke.py \
-		--ignore=tests/test_dryrun_small.py
 
 # Role-sharded engine suite, run directly against 8 forced host devices
 # (faster than the tests/test_mesh.py subprocess wrapper; same tests).
 test-mesh:
 	XLA_FLAGS="$$XLA_FLAGS --xla_force_host_platform_device_count=8" \
 		python -m pytest -q tests/_mesh_impl.py
+
+# Process-isolated engine suite only (spawned workers, shm servers,
+# crash restart) — the slow end-to-end subset of the tier-1 run.
+test-procs:
+	python -m pytest -q tests/test_procs.py
+
+# Correctness lint (ruff F/E9 rules, config in pyproject.toml). CI
+# installs ruff from requirements-dev.txt; hosts without it fall back to
+# the stdlib-only approximation so `make lint` is still meaningful.
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check src tests benchmarks examples; \
+	else \
+		echo "ruff not found (pip install -r requirements-dev.txt);" \
+		     "running stdlib fallback linter"; \
+		python tools/lint_fallback.py src tests benchmarks examples; \
+	fi
 
 bench:
 	python -m benchmarks.run

@@ -20,7 +20,9 @@ def build_algo(env, algo_name, *, n_models=3, imagine_batch=48,
     acfg = AlgoConfig(algo=algo_name, imagine_batch=imagine_batch,
                       imagine_horizon=imagine_horizon, n_models=n_models)
     algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
-    return ens, pol, algo
+    # acfg rides along for mode="procs" engines, whose children rebuild
+    # the algo from plain configs
+    return ens, pol, acfg, algo
 
 
 def run_engine(env_name, algo_name, engine, *, trajs=20, seed=0, tag="",
@@ -47,7 +49,7 @@ def run_engine(env_name, algo_name, engine, *, trajs=20, seed=0, tag="",
         tr = ModelFreeTrainer(env, pol, rc, algo=engine[3:])
         trace = tr.run()
     else:
-        ens, pol, algo = build_algo(env, algo_name)
+        ens, pol, _acfg, algo = build_algo(env, algo_name)
         eng = {"async": AsyncTrainer, "sequential": SequentialTrainer,
                "partial-model": PartialAsyncModelPolicy,
                "partial-data": PartialAsyncDataPolicy}[engine]

@@ -10,7 +10,10 @@ supposed to guarantee (and what the seed code violated):
   refresh);
 * parameter-server costs: ``pull_if_newer`` on an unchanged version
   (lock + int compare) vs a full ``pull_host`` materialisation;
-* end-to-end ``threads``-mode throughput (trajs/s, policy steps/s).
+* end-to-end ``threads``-mode throughput (trajs/s, policy steps/s);
+* end-to-end ``procs``-mode throughput (separate OS processes over
+  shared-memory stores; ``procs_policy_steps_per_s`` is the post-warmup
+  steady-state rate, directly comparable to the threads metric).
 
 Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
 the repo root. With ``--check``, compares fresh numbers against the
@@ -78,19 +81,19 @@ def _block(x):
 
 
 def _build(env_name="pendulum", algo_name="me-trpo"):
-    from repro.core import AsyncTrainer, RunConfig
+    from repro.core import RunConfig
     from benchmarks.common import build_algo
     from repro.envs import make_env
     env = make_env(env_name)
-    ens, pol, algo = build_algo(env, algo_name)
+    ens, pol, acfg, algo = build_algo(env, algo_name)
     rc = RunConfig(total_trajs=8, seed=0)
-    return env, ens, algo, rc
+    return env, ens, algo, rc, (pol, acfg)
 
 
 def bench_worker_steps(metrics):
     """Steady-state per-step latency + retrace counts for all 3 workers."""
-    from repro.core import AsyncTrainer, RunConfig
-    env, ens, algo, rc = _build()
+    from repro.core import AsyncTrainer
+    env, ens, algo, rc, _cfgs = _build()
     tr = AsyncTrainer(env, ens, algo, rc)
 
     # -- collect: steady-state gated-pull + rollout + zero-copy push
@@ -172,7 +175,7 @@ def bench_parameter_server(metrics):
 def bench_threads_throughput(metrics):
     """End-to-end threads-mode run: real wall time, worker throughputs."""
     from repro.core import AsyncTrainer, RunConfig
-    env, ens, algo, _ = _build()
+    env, ens, algo, _, _cfgs = _build()
     # pace collection at 50x robot speed so the learners actually share
     # the run (unpaced, a simulated pendulum rollout takes ~1ms and the
     # stop criterion fires before the model/policy workers do anything)
@@ -202,6 +205,60 @@ def bench_threads_throughput(metrics):
         tr.policy_worker.steps / wall, 2)
     metrics["threads_model_epochs_per_s"] = round(
         tr.model_worker.epochs / wall, 2)
+    return metrics
+
+
+def bench_procs_throughput(metrics):
+    """End-to-end procs-mode run: three spawned OS processes talking
+    through shared-memory parameter stores + a trajectory queue.
+
+    Children compile inside the run (a fresh process can't be
+    pre-warmed from here), so the steady-state rates are measured over
+    the POST-WARMUP window: from the first real policy improvement the
+    parent observes (policy server version 2) to run end, using the
+    shared version counters. ``procs_wall_s`` keeps the whole run
+    including compiles for the record."""
+    import threading
+
+    from repro.core import AsyncTrainer, RunConfig
+    env, ens, _algo, _, (pol, acfg) = _build()
+    rc = RunConfig(total_trajs=16, seed=0, collect_speed=50.0,
+                   pace_collection=True, min_warmup_trajs=4,
+                   min_final_model_version=1, min_final_policy_version=40)
+    tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                      algo_cfg=acfg, pol_cfg=pol)
+    done = {}
+    th = threading.Thread(target=lambda: done.setdefault("t", tr.run()),
+                          daemon=True)
+    t_start = time.perf_counter()
+    th.start()
+    warm = None
+    while th.is_alive() and warm is None:
+        srv = getattr(tr, "_proc_servers", None)
+        if srv and srv["policy"].version >= 2:
+            warm = (time.perf_counter(), srv["policy"].version,
+                    srv["model"].version)
+        else:
+            time.sleep(0.005)
+    th.join(timeout=900)
+    _require(not th.is_alive(), "procs run wedged")
+    t_end = time.perf_counter()
+    info = tr.proc_info
+    metrics["procs_wall_s"] = round(t_end - t_start, 3)
+    metrics["procs_trajs_per_s"] = round(
+        info["trajs"] / (t_end - t_start), 2)
+    if warm is not None:
+        t_w, pv_w, mv_w = warm
+        span = max(t_end - t_w, 1e-9)
+        metrics["procs_policy_steps_per_s"] = round(
+            (info["policy_version"] - pv_w) / span, 2)
+        metrics["procs_model_epochs_per_s"] = round(
+            (info["model_version"] - mv_w) / span, 2)
+    else:       # run ended between polls: whole-run fallback
+        metrics["procs_policy_steps_per_s"] = round(
+            max(info["policy_version"] - 1, 0) / (t_end - t_start), 2)
+        metrics["procs_model_epochs_per_s"] = round(
+            info["model_version"] / (t_end - t_start), 2)
     return metrics
 
 
@@ -241,7 +298,7 @@ def _sharded_child() -> dict:
     from repro.core import AsyncTrainer
     from repro.core.roles import replicated
     from repro.core.servers import ParameterServer
-    env, ens, algo, rc = _build()
+    env, ens, algo, rc, _cfgs = _build()
     mesh = jax.make_mesh((8,), ("data",))
     tr = AsyncTrainer(env, ens, algo, rc, mesh=mesh, role_ratios=(1, 2, 1))
     _require(not tr.roles.shared, "8-device split must not be degenerate")
@@ -300,6 +357,7 @@ def run_bench(*, sharded: bool = False) -> dict:
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
     bench_threads_throughput(metrics)
+    bench_procs_throughput(metrics)
     if sharded:
         bench_sharded(metrics)
     return {

@@ -3,6 +3,12 @@
 Layout: <dir>/step_<N>/arrays.npz + tree.json (structure + dtypes).
 Works for params, optimizer states, MBRL worker states — anything made of
 array leaves. Atomic via tmp-dir rename; keeps the last ``keep`` steps.
+
+The flat-key codec (flatten -> per-leaf storable dtype view -> restore)
+is exposed as ``flat_codec`` so other fixed-structure array transports
+can share it — the process-isolated engine's shared-memory parameter
+store (core/servers.ShmParameterServer) serialises every push/pull with
+it instead of pickling pytrees.
 """
 from __future__ import annotations
 
@@ -10,7 +16,7 @@ import json
 import os
 import shutil
 from pathlib import Path
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import ml_dtypes
@@ -41,6 +47,41 @@ def _from_storable(a, dtype):
 def _flatten(tree):
     flat, treedef = jax.tree.flatten(tree)
     return flat, treedef
+
+
+class LeafCodec:
+    """Flat-key codec for ONE pytree structure: host-materialises leaves
+    into their storable (npz/shm-safe) dtypes and restores them. The
+    structure, shapes and dtypes are fixed at construction from a
+    template, so encode/decode never re-derive metadata — exactly what a
+    preallocated shared-memory transport needs."""
+
+    def __init__(self, template):
+        flat, self.treedef = _flatten(template)
+        self.dtypes = [np.dtype(getattr(x, "dtype", None)
+                                or np.asarray(x).dtype) for x in flat]
+        self.shapes = [tuple(x.shape) for x in flat]
+        self.storable_dtypes = [_EXOTIC.get(dt, dt) for dt in self.dtypes]
+        self.nbytes = [int(np.prod(s, dtype=np.int64)) * np.dtype(sd).itemsize
+                       for s, sd in zip(self.shapes, self.storable_dtypes)]
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    def encode(self, tree):
+        """Pytree -> list of host np arrays in storable dtypes (the only
+        device->host hop of a cross-process push)."""
+        flat, treedef = _flatten(tree)
+        assert treedef == self.treedef, (treedef, self.treedef)
+        return [np.ascontiguousarray(_to_storable(np.asarray(x)))
+                for x in flat]
+
+    def decode(self, flat_storable):
+        """List of storable np arrays -> pytree with original dtypes."""
+        leaves = [_from_storable(a, dt).reshape(s) for a, dt, s in
+                  zip(flat_storable, self.dtypes, self.shapes)]
+        return jax.tree.unflatten(self.treedef, leaves)
 
 
 def save_pytree(path, tree, *, step: Optional[int] = None, keep: int = 3):

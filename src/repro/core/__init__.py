@@ -4,6 +4,8 @@ from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
                                 SequentialTrainer, clear_eval_cache)
 from repro.core.servers import (DataServer, LocalBuffer, ParameterServer,
-                                ReplayBuffer)
+                                ProcDataServer, ReplayBuffer,
+                                ShmParameterServer)
 from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
-                                PolicyImprovementWorker)
+                                PolicyImprovementWorker, ProcChannels,
+                                ProcSpec, proc_worker_main)

@@ -22,7 +22,6 @@ import dataclasses
 import warnings
 from typing import Tuple
 
-import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 

@@ -1,14 +1,24 @@
 """Training engines.
 
-* ``AsyncTrainer`` — the paper's contribution (Fig. 1a). Two execution
+* ``AsyncTrainer`` — the paper's contribution (Fig. 1a). Three execution
   modes sharing the same worker objects:
     - ``mode="event"``: deterministic discrete-event simulation. Each
       worker has a virtual-time cursor; the engine always advances the
       worker with the SMALLEST cursor, so relative speeds (robot control
       frequency vs. compute) are reproduced exactly — this is how the
       paper's Figures 2/3/5 are regenerated on CPU CI.
-    - ``mode="threads"``: real host threads + RealClock (production; on a
-      pod, each worker drives its own mesh-slice — core/roles.py).
+    - ``mode="threads"``: real host threads + RealClock (shares one GIL
+      and one jax runtime: model/policy compute still steals cycles
+      from the collector).
+    - ``mode="procs"``: separate OS processes (spawn context, one jax
+      backend each) talking through shared-memory parameter stores and
+      a trajectory queue (servers.ShmParameterServer/ProcDataServer) —
+      the paper's actual claim, "run time ~= data collection time", on
+      a real multicore host. The parent supervises: periodic
+      params+version snapshots via checkpoint/io.py, dead children
+      restarted from the latest snapshot (a crash degrades the run
+      instead of hanging it). See ROADMAP.md "Process-isolation
+      invariants (PR 4)".
 * ``SequentialTrainer`` — the classic synchronous baseline (Fig. 1b).
 * ``PartialAsyncModelPolicy`` — §5.2 ablation (interleave model/policy).
 * ``PartialAsyncDataPolicy`` — §5.3 ablation (interleave data/policy).
@@ -19,9 +29,11 @@ All engines record an eval trace: list of dicts
 from __future__ import annotations
 
 import dataclasses
-import heapq
+import queue as _queue
+import tempfile
 import threading
 import time
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -29,9 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.roles import RoleSplit, split_roles
-from repro.core.servers import DataServer, ParameterServer
+from repro.core.servers import (DataServer, ParameterServer, ProcDataServer,
+                                ShmParameterServer)
 from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
-                                PolicyImprovementWorker, WorkerTimes)
+                                PolicyImprovementWorker, ProcChannels,
+                                ProcSpec, proc_worker_main)
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
 
@@ -65,6 +79,22 @@ class RunConfig:
     # collect_speed) so wall-clock reproduces the paper's real-robot rate
     # instead of racing simulated rollouts at compute speed
     pace_collection: bool = False
+    # procs mode: parent supervision — snapshot cadence for the
+    # params+versions checkpoint (checkpoint/io.py), where to put it
+    # (None -> fresh temp dir), and how many crash-restarts each worker
+    # role gets before the run is declared failed
+    snapshot_every_s: float = 2.0
+    ckpt_dir: Optional[str] = None
+    max_restarts: int = 3
+    # procs mode: after the collector reaches total_trajs, keep the
+    # learner processes running until their servers reach these versions
+    # (0 = stop immediately, the paper's pure criterion). A simulated
+    # collector can outrun the learners' first XLA compile entirely; CI
+    # uses this to assert the run actually trained. The model worker
+    # only pushes after min_warmup_trajs, so never set
+    # min_final_model_version > 0 with total_trajs < min_warmup_trajs.
+    min_final_model_version: int = 0
+    min_final_policy_version: int = 0
 
 
 # One compiled eval program per (env, n_rollouts): every _Recorder used
@@ -125,12 +155,36 @@ class AsyncTrainer:
                  run_cfg: Optional[RunConfig] = None, *,
                  mode: str = "event", mesh=None,
                  roles: Optional[RoleSplit] = None,
-                 role_ratios=(1, 2, 1), role_axis: Optional[str] = None):
+                 role_ratios=(1, 2, 1), role_axis: Optional[str] = None,
+                 algo_cfg=None, pol_cfg=None):
         """``mesh``/``roles``: run each worker against its own role
         sub-mesh (core/roles.py). Pass a ``roles`` RoleSplit directly, or
         a ``mesh`` to split by ``role_ratios`` along ``role_axis``.
         Default (both None) is the single-device behaviour — all existing
-        callers and the event engine are untouched."""
+        callers and the event engine are untouched.
+
+        ``mode="procs"`` additionally requires ``algo_cfg``/``pol_cfg``
+        (plain-config AlgoConfig/PolicyConfig): spawned children cannot
+        unpickle a built algo (it closes over jitted callables) — they
+        rebuild it from configs. ``algo=None`` is then allowed and built
+        here the same way (make_algo)."""
+        if mode == "procs":
+            if algo_cfg is None or pol_cfg is None:
+                raise ValueError(
+                    'mode="procs" needs algo_cfg= and pol_cfg= (children '
+                    "rebuild the algorithm from plain configs)")
+            if mesh is not None or roles is not None:
+                raise ValueError(
+                    'mode="procs" does not take a role mesh: each child '
+                    "owns its whole local backend (per-process meshes "
+                    "are future work, see ROADMAP.md)")
+            if algo is None:
+                from repro.mbrl.algos import make_algo
+                algo = make_algo(algo_cfg, pol_cfg, jax.vmap(env.reward),
+                                 env.reset_batch)
+        self.algo_cfg = algo_cfg
+        self.pol_cfg = pol_cfg
+        self.ens_cfg = ens_cfg
         self.env = env
         # fresh per-instance config: a shared mutable default would leak
         # one caller's tweaks into every later trainer
@@ -170,6 +224,8 @@ class AsyncTrainer:
     def run(self) -> List[Dict[str, float]]:
         if self.mode == "threads":
             return self._run_threads()
+        if self.mode == "procs":
+            return self._run_procs()
         return self._run_event()
 
     def _run_event(self):
@@ -254,6 +310,163 @@ class AsyncTrainer:
         self._keval, k = jax.random.split(self._keval)
         self.recorder.record(time.monotonic() - t0, self.collector.collected,
                              self.policy_worker.state["policy"], k)
+        return self.recorder.trace
+
+    # ------------------------------------------------------------- procs
+    def _drain_trace(self, trace_q) -> None:
+        while True:
+            try:
+                self.recorder.trace.append(trace_q.get_nowait())
+            except _queue.Empty:
+                return
+
+    def _snapshot(self, ckpt_dir, model_srv, policy_srv, step) -> int:
+        """Checkpoint params+versions of both stores. Until a store's
+        first push, its slot holds the (deterministic) init params at
+        version 0 — restoring that is exactly 'restart from scratch'.
+
+        A DEGRADED pull (None despite version > 0: the writer died
+        mid-push, or pathological contention) must NOT be snapshotted —
+        substituting init params there would ratchet the newest
+        checkpoint back to scratch and a restarting worker would
+        republish it over trained progress. Keep the previous snapshot
+        instead and let the next cycle retry."""
+        from repro.checkpoint import io as ckpt_io
+        m, mv = model_srv.pull_host()
+        p, pv = policy_srv.pull_host()
+        if (m is None and model_srv.version > 0) or \
+                (p is None and policy_srv.version > 0):
+            return step
+        if m is None:
+            m, mv = jax.tree.map(np.asarray, self.model_worker.params), 0
+        if p is None:
+            p, pv = jax.tree.map(
+                np.asarray, self.policy_worker.state["policy"]), 0
+        tree = {"model": m, "model_version": np.int64(mv),
+                "policy": p, "policy_version": np.int64(pv)}
+        ckpt_io.save_pytree(ckpt_dir, tree, step=step, keep=3)
+        return step + 1
+
+    def _run_procs(self):
+        import multiprocessing as mp
+        rc = self.run_cfg
+        ctx = mp.get_context("spawn")   # NEVER fork: the parent's jax
+        #                                 runtime must not leak into
+        #                                 children (fork corrupts XLA)
+        ckpt_dir = Path(rc.ckpt_dir) if rc.ckpt_dir else \
+            Path(tempfile.mkdtemp(prefix="repro_procs_ckpt_"))
+        model_srv = ShmParameterServer(self.model_worker.params)
+        policy_srv = ShmParameterServer(self.policy_worker.state["policy"])
+        data_srv = ProcDataServer(ctx)
+        trace_q = ctx.Queue()
+        stop = ctx.Event()
+        ch = ProcChannels(model_srv, policy_srv, data_srv, trace_q, stop,
+                          t0=time.monotonic())
+        spec = ProcSpec(self.env, self.ens_cfg, self.algo_cfg, self.pol_cfg,
+                        rc, rc.seed)
+        # exposed for tests/benchmarks: kill-and-restart pokes _procs,
+        # the hotpath bench reads server versions while the run is live
+        self._proc_servers = {"model": model_srv, "policy": policy_srv,
+                              "data": data_srv}
+        self.proc_info: Dict[str, Any] = {"restarts": {}, "ckpt_dir":
+                                          str(ckpt_dir)}
+
+        def spawn(role, resume=False):
+            # children must re-import repro whatever launched the parent
+            # (pytest, a notebook, an installed console script)
+            import os
+
+            import repro
+
+            # namespace package: __file__ is None, __path__ holds the dir
+            pkg_dir = (repro.__file__ and Path(repro.__file__).parent) or \
+                Path(next(iter(repro.__path__)))
+            src_root = str(Path(pkg_dir).resolve().parent)
+            old_pp = os.environ.get("PYTHONPATH")
+            if src_root not in (old_pp or "").split(os.pathsep):
+                os.environ["PYTHONPATH"] = \
+                    src_root + (os.pathsep + old_pp if old_pp else "")
+            try:
+                p = ctx.Process(
+                    target=proc_worker_main, name=f"repro-{role}",
+                    args=(role, spec, ch, str(ckpt_dir) if resume else None),
+                    daemon=True)
+                p.start()
+            finally:
+                if old_pp is None:
+                    os.environ.pop("PYTHONPATH", None)
+                else:
+                    os.environ["PYTHONPATH"] = old_pp
+            return p
+
+        restarts = {r: 0 for r in ("collector", "model", "policy")}
+        self._procs = {}
+        last_snap = time.monotonic()
+        snap_step = 0
+        try:
+            for r in ("policy", "model", "collector"):
+                self._procs[r] = spawn(r)
+            while True:
+                self._drain_trace(trace_q)
+                if self._procs["collector"].exitcode == 0 and \
+                        model_srv.version >= rc.min_final_model_version and \
+                        policy_srv.version >= rc.min_final_policy_version:
+                    break           # stopping criterion reached cleanly
+                for role, p in list(self._procs.items()):
+                    ec = p.exitcode
+                    if ec is not None and ec != 0:
+                        restarts[role] += 1
+                        if restarts[role] > rc.max_restarts:
+                            raise RuntimeError(
+                                f"{role} worker crashed (exit {ec}) more "
+                                f"than max_restarts={rc.max_restarts} "
+                                "times")
+                        p.join()
+                        # restart from the LATEST snapshot: the child
+                        # reloads params+versions via checkpoint/io.py
+                        self._procs[role] = spawn(role, resume=True)
+                if time.monotonic() - last_snap >= rc.snapshot_every_s:
+                    snap_step = self._snapshot(ckpt_dir, model_srv,
+                                               policy_srv, snap_step)
+                    last_snap = time.monotonic()
+                time.sleep(0.02)
+            stop.set()
+            for role in ("model", "policy"):
+                self._procs[role].join(timeout=120)
+            # final eval row arrives AFTER the policy child saw stop
+            try:
+                self.recorder.trace.append(trace_q.get(timeout=10))
+            except _queue.Empty:
+                pass
+            self._drain_trace(trace_q)
+            # adopt the children's final published params so the parent
+            # object looks exactly like a threads-mode trainer afterwards
+            m_final, mv = model_srv.pull_host()
+            p_final, pv = policy_srv.pull_host()
+            if p_final is not None:
+                self.policy_worker.state = {
+                    **self.policy_worker.state,
+                    "policy": jax.tree.map(jnp.asarray, p_final)}
+                self.policy_server.push(self.policy_worker.state["policy"])
+            if m_final is not None:
+                self.model_worker.params = jax.tree.map(jnp.asarray, m_final)
+                self.model_server.push(self.model_worker.params)
+            self.collector.collected = data_srv.total_pushed
+            snap_step = self._snapshot(ckpt_dir, model_srv, policy_srv,
+                                       snap_step)
+            self.proc_info.update({
+                "model_version": int(mv), "policy_version": int(pv),
+                "restarts": dict(restarts), "trajs": data_srv.total_pushed})
+        finally:
+            stop.set()
+            for p in self._procs.values():
+                if p.is_alive():
+                    p.join(timeout=10)
+                if p.is_alive():
+                    p.terminate()
+                    p.join(timeout=5)
+            model_srv.close()
+            policy_srv.close()
         return self.recorder.trace
 
 

@@ -5,6 +5,19 @@ two parameter servers (model, policy). Thread-safe, versioned; ``pull``
 never blocks on a writer (the paper's lock-free spirit at phase
 granularity — see DESIGN.md §2 for the TPU adaptation).
 
+Two transport families share one interface:
+
+* in-process (``ParameterServer`` / ``DataServer``): device-resident,
+  zero-copy — the event and threads engines;
+* cross-process (``ShmParameterServer`` / ``ProcDataServer``): the
+  ``mode="procs"`` engine. Parameters live in a posix shared-memory
+  segment serialised with the flat-key codec from ``checkpoint/io.py``
+  (never pickled per-pull); trajectories ride a ``multiprocessing``
+  queue into the model worker's ring buffer. The PR 1 version contract
+  is preserved: ``push`` bumps an atomic version, ``pull_if_newer`` on
+  an unchanged version is ONE 8-byte read — zero array copies
+  (counter-instrumented; asserted by tests/test_procs.py).
+
 Hot-path invariants (see benchmarks/hotpath.py, which enforces them):
 
 * ``ParameterServer`` keeps values DEVICE-RESIDENT. ``push``/``pull``
@@ -18,8 +31,10 @@ Hot-path invariants (see benchmarks/hotpath.py, which enforces them):
 """
 from __future__ import annotations
 
+import queue as _queue
+import struct
 import threading
-from functools import partial
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -154,6 +169,245 @@ class DataServer:
     def __len__(self) -> int:
         with self._lock:
             return len(self._items)
+
+
+# ----------------------------------------------------------------- procs IPC
+#
+# Cross-process equivalents for mode="procs" (runtime._run_procs). The
+# parent creates them before spawning workers; the handles are picklable
+# through multiprocessing's spawn machinery and re-attach lazily in each
+# child. See ROADMAP.md "Process-isolation invariants (PR 4)".
+
+_SHM_HEADER = 64            # [0:8) seqlock, [8:16) version, rest reserved
+_SHM_ALIGN = 64             # leaf payloads start cache-line aligned
+
+
+def _attach_shm(name):
+    """Attach (never create) an existing segment WITHOUT handing its
+    lifetime to this process's resource tracker.
+
+    Python < 3.13 registers POSIX shm with the tracker on ATTACH too
+    (bpo-39959): harmless for mp-spawned workers (they inherit the
+    creator's tracker, whose bookkeeping the creator's ``unlink``
+    balances), but a standalone attacher — e.g. a tool unpickling a
+    server handle — starts its OWN tracker, which would unlink the live
+    segment when that process exits. So: prefer ``track=False``
+    (3.13+); otherwise unregister ONLY when the attach just started a
+    fresh tracker, i.e. this process is a standalone attacher (an
+    inherited-tracker unregister would instead erase the creator's
+    registration and spray KeyErrors at unlink time)."""
+    from multiprocessing import shared_memory
+    try:
+        return shared_memory.SharedMemory(name=name, track=False)
+    except TypeError:
+        pass
+    try:
+        from multiprocessing import resource_tracker
+        had_tracker = getattr(resource_tracker._resource_tracker,
+                              "_fd", None) is not None
+    except Exception:
+        had_tracker = True      # can't tell: don't touch the tracker
+    shm = shared_memory.SharedMemory(name=name)
+    if not had_tracker:
+        try:
+            resource_tracker.unregister(shm._name, "shared_memory")
+        except Exception:
+            pass
+    return shm
+
+
+class ShmParameterServer:
+    """Versioned parameter store in ONE posix shared-memory segment.
+
+    The pytree structure is FIXED at construction from a template (the
+    worker's initial params): leaves are serialised with the flat-key
+    codec from ``checkpoint/io.py`` into preallocated aligned slots —
+    a push is a plain ``memcpy`` per leaf, never a pickle.
+
+    Concurrency is a single-writer seqlock (each server is written by
+    exactly one role — model worker or policy worker):
+
+    * ``push``: bump the sequence word to odd, copy payload, bump to
+      even, then bump the version word (one atomic aligned 8-byte
+      store). Version therefore never points at a torn payload.
+    * ``pull_if_newer(version)``: ONE 8-byte read when unchanged — zero
+      array copies, no lock to block on (``copies`` counts every leaf
+      copied out; the unchanged path leaves it untouched). On a version
+      change the payload is copied out inside a stable even-sequence
+      window, retrying while a writer overlaps.
+    * crash safety: a writer killed mid-push leaves the sequence odd;
+      readers simply keep their cached value (degrade, not hang) and
+      the restarted writer's next push re-synchronises the sequence.
+      No cross-process lock exists, so there is nothing to repair.
+
+    Benign race: version is bumped after the payload settles, so a
+    reader can momentarily get a fresher payload with the previous
+    version number — the next gated pull re-copies; never torn data.
+    """
+
+    _READ_RETRIES = 64
+
+    def __init__(self, template):
+        from multiprocessing import shared_memory
+
+        from repro.checkpoint.io import LeafCodec
+        self._codec = LeafCodec(template)
+        self._offsets = []
+        off = _SHM_HEADER
+        for n in self._codec.nbytes:
+            self._offsets.append(off)
+            off += max(int(n), 1)
+            off += (-off) % _SHM_ALIGN
+        self._size = off
+        shm = shared_memory.SharedMemory(create=True, size=self._size)
+        self._name = shm.name
+        self._shm = shm
+        self._owner = True          # creator unlinks; children only close
+        self._views = None
+        shm.buf[:_SHM_HEADER] = b"\0" * _SHM_HEADER
+        self.copies = 0             # client-local: leaves copied OUT
+        self.pushes = 0             # client-local: pushes issued
+
+    # -- pickling: children re-attach to the named segment lazily -------
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_shm"] = None
+        state["_views"] = None
+        state["_owner"] = False
+        return state
+
+    def _seg(self):
+        if self._shm is None:
+            self._shm = _attach_shm(self._name)
+        return self._shm
+
+    def _leaf_views(self):
+        if self._views is None:
+            buf = self._seg().buf
+            self._views = [
+                np.frombuffer(buf, dtype=sd,
+                              count=int(np.prod(sh, dtype=np.int64)),
+                              offset=off).reshape(sh)
+                for sd, sh, off in zip(self._codec.storable_dtypes,
+                                       self._codec.shapes, self._offsets)]
+        return self._views
+
+    def _read_word(self, off) -> int:
+        return struct.unpack_from("<q", self._seg().buf, off)[0]
+
+    def _write_word(self, off, value) -> None:
+        struct.pack_into("<q", self._seg().buf, off, value)
+
+    def push(self, value) -> int:
+        host = self._codec.encode(value)    # the one device->host hop
+        views = self._leaf_views()
+        seq = self._read_word(0)
+        begin = seq + 1 + (seq % 2)         # next odd > seq, even if a
+        self._write_word(0, begin)          # crashed writer left it odd
+        for view, arr in zip(views, host):
+            np.copyto(view, arr, casting="no")
+        self._write_word(0, begin + 1)      # payload settled (even)
+        ver = self._read_word(8) + 1        # single writer: RMW is safe
+        self._write_word(8, ver)
+        self.pushes += 1
+        return ver
+
+    def pull_if_newer(self, version: int, *, sharding=None):
+        """(value, current_version) when newer than ``version`` else
+        (None, version-as-seen). Unchanged cost: ONE aligned 8-byte read.
+        ``sharding`` is accepted for interface parity with
+        :class:`ParameterServer` and ignored: pulled leaves are host
+        arrays — the worker re-homes them onto its own device/backend
+        (each process owns a separate jax runtime)."""
+        ver = self._read_word(8)
+        if ver == version or ver == 0:
+            return None, ver
+        views = self._leaf_views()
+        for _ in range(self._READ_RETRIES):
+            s1 = self._read_word(0)
+            if s1 % 2:                      # writer mid-copy
+                time.sleep(0.0005)
+                continue
+            out = [np.array(v) for v in views]
+            if self._read_word(0) == s1:    # no writer overlapped
+                self.copies += len(out)
+                # return the version read at ENTRY, not a re-read: the
+                # payload is at least that fresh, and labelling it with
+                # a version that completed during the copy would let
+                # the next gated pull skip a push the caller never saw.
+                # Worst case here is one redundant re-copy.
+                return self._codec.decode(out), ver
+        # writer crashed mid-push (sequence stuck odd) or pathological
+        # contention: degrade — caller keeps its cache and retries later
+        return None, version
+
+    def pull(self):
+        value, ver = self.pull_if_newer(-1)
+        return value, (ver if value is not None else self.version)
+
+    def pull_host(self):
+        """Interface parity with ParameterServer: pulls are already
+        host-materialised."""
+        return self.pull()
+
+    @property
+    def version(self) -> int:
+        return self._read_word(8)
+
+    # -- lifecycle ------------------------------------------------------
+    def close(self) -> None:
+        """Drop this process's mapping (and unlink if creator)."""
+        self._views = None          # np views pin shm.buf; drop them first
+        if self._shm is not None:
+            self._shm.close()
+            if self._owner:
+                try:
+                    self._shm.unlink()
+                except FileNotFoundError:
+                    pass
+            self._shm = None
+
+
+class ProcDataServer:
+    """Cross-process DataServer: a bounded trajectory queue. The
+    collector pushes host-materialised trajectories; the model worker
+    drains them into its ring ReplayBuffer (Alg. 2 'move all
+    trajectories from the remote buffer'). ``total_pushed`` is a shared
+    counter so a RESTARTED collector resumes the global trajectory
+    count instead of re-collecting from zero."""
+
+    def __init__(self, ctx, *, maxsize: int = 512):
+        self._q = ctx.Queue(maxsize)
+        self._total = ctx.Value("q", 0)
+
+    def push(self, traj, *, timeout: Optional[float] = 30.0) -> int:
+        host = jax.tree.map(np.asarray, traj)   # process boundary
+        self._q.put(host, timeout=timeout)
+        with self._total.get_lock():
+            self._total.value += 1
+            return self._total.value
+
+    def drain(self) -> List[Any]:
+        items: List[Any] = []
+        while True:
+            try:
+                items.append(self._q.get_nowait())
+            except _queue.Empty:
+                return items
+
+    @property
+    def total_pushed(self) -> int:
+        return int(self._total.value)
+
+    def __len__(self) -> int:
+        try:
+            return self._q.qsize()
+        except NotImplementedError:     # macOS
+            return 0
+
+    def close(self) -> None:
+        self._q.close()
+        self._q.join_thread()
 
 
 # --------------------------------------------------------------------- ring

@@ -19,11 +19,23 @@ batch-like data is sharded along its leading axis, and cross-role
 movement happens only through the placement-aware servers (explicit
 device-to-device ``device_put`` on version change). ``mesh=None`` is the
 single-device behaviour, bit-for-bit unchanged.
+
+Process isolation (``mode="procs"``, runtime._run_procs): the same
+worker objects ALSO run as separate OS processes. The module-level
+``proc_worker_main(role, spec, channels)`` entrypoint is picklable
+through the spawn context: it rebuilds env/algo/worker from plain
+configs (``ProcSpec``) + seed + role inside the child — each child owns
+its own jax backend — and talks only through the IPC servers in
+``channels`` (ShmParameterServer / ProcDataServer). Cross-process pulls
+return host arrays; the pull paths below re-home them onto the worker's
+device exactly once per version change, so step loops stay
+device-resident in every mode.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+import time
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +45,14 @@ from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
 from repro.mbrl.early_stop import EMAEarlyStop
+
+
+def _to_device(tree):
+    """Re-home host (np) leaves pulled across a process boundary onto
+    this worker's device; jax.Array leaves pass through untouched (the
+    in-process servers stay zero-copy)."""
+    return jax.tree.map(
+        lambda x: x if isinstance(x, jax.Array) else jnp.asarray(x), tree)
 
 
 @dataclasses.dataclass
@@ -54,11 +74,16 @@ class DataCollectionWorker:
     def __init__(self, env, policy_server: ParameterServer,
                  data_server: DataServer, init_policy_params, key,
                  *, speed: float = 1.0, mesh=None):
+        """``init_policy_params=None`` (procs mode): the collector has no
+        in-process policy worker to borrow initial params from — it idles
+        (``step`` returns None) until the policy process publishes
+        version 1."""
         self.env = env
         self.policy_server = policy_server
         self.data_server = data_server
         self._key = key
-        self._policy_cache = jax.tree.map(jnp.asarray, init_policy_params)
+        self._policy_cache = (None if init_policy_params is None else
+                              jax.tree.map(jnp.asarray, init_policy_params))
         self._policy_ver = 0
         self.speed = speed  # >1: faster collection (Fig. 5b)
         self.collected = 0
@@ -68,16 +93,21 @@ class DataCollectionWorker:
         if mesh is not None:
             self._sharding = jax.sharding.SingleDeviceSharding(
                 mesh.devices.flat[0])
-            self._policy_cache = jax.device_put(self._policy_cache,
-                                                self._sharding)
+            if self._policy_cache is not None:
+                self._policy_cache = jax.device_put(self._policy_cache,
+                                                    self._sharding)
         self._rollout = jax.jit(
             lambda p, k: env.rollout(k, PI.sample_action, p))
 
-    def step(self) -> float:
+    def step(self) -> Optional[float]:
+        """One trajectory; returns its robot-time duration, or None when
+        no policy has been published yet (procs-mode warmup)."""
         fresh, self._policy_ver = self.policy_server.pull_if_newer(
             self._policy_ver, sharding=self._sharding)  # Pull (gated)
         if fresh is not None:
-            self._policy_cache = fresh
+            self._policy_cache = _to_device(fresh)
+        if self._policy_cache is None:
+            return None
         self._key, k = jax.random.split(self._key)
         traj = self._rollout(self._policy_cache, k)     # Step
         self.data_server.push(traj)                     # Push
@@ -183,7 +213,11 @@ class PolicyImprovementWorker:
 
     def __init__(self, algo, policy_server: ParameterServer,
                  model_server: ParameterServer, key, *, mesh=None,
-                 batch_axis: Optional[str] = None):
+                 batch_axis: Optional[str] = None, push_init: bool = True):
+        """``push_init=False`` (procs-mode crash restart): suppress the
+        initial random-policy push so a restarted worker can first load
+        the latest snapshot and publish THAT instead — collectors never
+        see a regression to fresh init params."""
         self.algo = algo
         self.policy_server = policy_server
         self.model_server = model_server
@@ -198,7 +232,8 @@ class PolicyImprovementWorker:
         self.state = algo.init(k0)
         if self._repl is not None:
             self.state = jax.device_put(self.state, self._repl)
-        self.policy_server.push(self.state["policy"])
+        if push_init:
+            self.policy_server.push(self.state["policy"])
         self._model_cache = None
         self._model_ver = 0
         self.steps = 0
@@ -207,7 +242,7 @@ class PolicyImprovementWorker:
         fresh, self._model_ver = self.model_server.pull_if_newer(
             self._model_ver, sharding=self._repl)       # Pull (gated)
         if fresh is not None:
-            self._model_cache = fresh
+            self._model_cache = _to_device(fresh)
         if self._model_cache is None:
             return False
         self._key, k = jax.random.split(self._key)
@@ -216,3 +251,163 @@ class PolicyImprovementWorker:
         self.steps += 1
         self.policy_server.push(self.state["policy"])   # Push
         return True
+
+
+# --------------------------------------------------------------- procs mode
+#
+# The paper's actual deployment shape: collector, model learner and
+# policy improver as SEPARATE OS PROCESSES, so model/policy compute
+# cannot steal cycles from the (real-time) collector even under the GIL.
+# Everything below must stay picklable through the spawn context:
+# plain-config dataclasses in, module-level entrypoint, IPC servers from
+# servers.py. Heavy objects (env rollout jits, algos, ensembles) are
+# REBUILT inside the child from ``(cfg, seed, role)``.
+
+@dataclasses.dataclass
+class ProcSpec:
+    """Everything a spawned worker needs to rebuild its role locally:
+    plain-dataclass configs + the shared seed. The child derives the
+    same per-role keys as the in-process engines (split(key(seed), 4))."""
+    env: Any                    # frozen env dataclass (picklable)
+    ens_cfg: DYN.EnsembleConfig
+    algo_cfg: Any               # mbrl.AlgoConfig
+    pol_cfg: PI.PolicyConfig
+    run_cfg: Any                # core.RunConfig
+    seed: int
+
+
+@dataclasses.dataclass
+class ProcChannels:
+    """IPC endpoints shared by all three worker processes."""
+    model_server: Any           # ShmParameterServer (written by model)
+    policy_server: Any          # ShmParameterServer (written by policy)
+    data: Any                   # ProcDataServer (collector -> model)
+    trace_q: Any                # mp.Queue: eval-trace rows -> parent
+    stop: Any                   # mp.Event: parent-ordered shutdown
+    t0: float                   # parent's monotonic run start (shared
+    #                             CLOCK_MONOTONIC: rows are run-relative)
+
+
+def _load_snapshot(resume_dir, spec):
+    """Latest parent snapshot as (tree, step) or (None, None). The
+    template is rebuilt from configs via eval_shape — no device work."""
+    import numpy as np
+
+    from repro.checkpoint import io as ckpt_io
+    if resume_dir is None or ckpt_io.latest_step(resume_dir) is None:
+        return None, None
+    template = {
+        "model": jax.eval_shape(
+            lambda: DYN.init_ensemble(spec.ens_cfg, jax.random.key(0))),
+        "model_version": jax.ShapeDtypeStruct((), np.int64),
+        "policy": jax.eval_shape(
+            lambda: PI.init_policy(spec.pol_cfg, jax.random.key(0))),
+        "policy_version": jax.ShapeDtypeStruct((), np.int64),
+    }
+    return ckpt_io.restore(resume_dir, template)
+
+
+def _proc_collector(spec, ch, key):
+    rc = spec.run_cfg
+    w = DataCollectionWorker(spec.env, ch.policy_server, ch.data, None,
+                             key, speed=rc.collect_speed)
+    # restart-safe stopping criterion: resume the GLOBAL trajectory count
+    w.collected = ch.data.total_pushed
+    while not ch.stop.is_set() and w.collected < rc.total_trajs:
+        t_step = time.monotonic()
+        try:
+            dur = w.step()
+        except Exception:
+            if ch.stop.is_set():    # queue torn down mid-push: clean exit
+                break
+            raise
+        if dur is None:             # policy process hasn't published yet
+            time.sleep(0.005)
+            continue
+        if rc.pace_collection:
+            # robot control frequency: one trajectory occupies `dur`
+            # seconds of real time however fast the simulation computes
+            time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
+
+
+def _proc_model(spec, ch, key, resume_dir):
+    rc = spec.run_cfg
+    w = ModelLearningWorker(spec.ens_cfg, ch.data, ch.model_server, key,
+                            ema_weight=rc.ema_weight,
+                            early_stop=rc.early_stop,
+                            min_trajs=rc.min_warmup_trajs)
+    snap, _ = _load_snapshot(resume_dir, spec)
+    if snap is not None:
+        # crash restart: resume from the parent's latest checkpoint and
+        # republish immediately — the policy worker sees a model version
+        # NEWER than at crash time instead of waiting out a re-warmup.
+        # (Optimizer state restarts fresh; the ring buffer refills from
+        # the live trajectory queue.)
+        w.params = _to_device(snap["model"])
+        ch.model_server.push(w.params)
+    while not ch.stop.is_set():
+        if w.step() is None:
+            time.sleep(0.002)
+
+
+def _proc_policy(spec, ch, key, keval, resume_dir):
+    from repro.core.runtime import _Recorder
+    from repro.mbrl.algos import make_algo
+    rc = spec.run_cfg
+    algo = make_algo(spec.algo_cfg, spec.pol_cfg,
+                     jax.vmap(spec.env.reward), spec.env.reset_batch)
+    # push_init=False: on a crash restart the snapshot policy must be
+    # published FIRST — collectors never regress to fresh init params
+    w = PolicyImprovementWorker(algo, ch.policy_server, ch.model_server,
+                                key, push_init=False)
+    snap, _ = _load_snapshot(resume_dir, spec)
+    if snap is not None:
+        w.state = {**w.state, "policy": _to_device(snap["policy"])}
+    w.policy_server.push(w.state["policy"])
+    rec = _Recorder(spec.env, rc.eval_rollouts)
+
+    def record():
+        nonlocal keval
+        keval, k = jax.random.split(keval)
+        rec.record(time.monotonic() - ch.t0, ch.data.total_pushed,
+                   w.state["policy"], k)
+        ch.trace_q.put(rec.trace[-1])
+
+    n = 0
+    while not ch.stop.is_set():
+        if w.step():
+            n += 1
+            if n % rc.eval_every_policy_steps == 0:
+                record()
+        else:
+            time.sleep(0.002)
+    record()                        # final eval at shutdown
+
+
+def proc_worker_main(role: str, spec: ProcSpec, ch: ProcChannels,
+                     resume_dir: Optional[str] = None) -> None:
+    """Picklable child entrypoint (spawn context). Each child initialises
+    its OWN jax backend on import — nothing jax crosses the process
+    boundary except host arrays through the IPC servers."""
+    key = jax.random.key(spec.seed)
+    _kc, _km, _kp, _keval = jax.random.split(key, 4)
+    try:
+        if role == "collector":
+            _proc_collector(spec, ch, _kc)
+        elif role == "model":
+            _proc_model(spec, ch, _km, resume_dir)
+        elif role == "policy":
+            _proc_policy(spec, ch, _kp, _keval, resume_dir)
+        else:
+            raise ValueError(f"unknown role {role!r}")
+    except KeyboardInterrupt:
+        pass
+    finally:
+        # drop this child's shm mappings cleanly (non-owners never
+        # unlink); otherwise cached np views make the interpreter-exit
+        # __del__ spray BufferErrors
+        for srv in (ch.model_server, ch.policy_server):
+            try:
+                srv.close()
+            except Exception:
+                pass

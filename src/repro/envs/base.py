@@ -14,7 +14,6 @@ horizon * dt seconds of robot time (§5.1).
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ path; its FLOPs/bytes are identical to the kernel's.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 

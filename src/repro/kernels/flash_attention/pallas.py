@@ -12,7 +12,6 @@ Validated on CPU via interpret=True against ref.naive_attention.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

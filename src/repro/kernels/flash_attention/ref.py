@@ -8,7 +8,6 @@ matrix and is the ground-truth oracle for tests.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

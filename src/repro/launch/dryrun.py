@@ -16,7 +16,6 @@ batches and caches are ShapeDtypeStructs (jax.eval_shape), and
 ``jit(...).lower(...).compile()`` produces only the executable.
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
@@ -27,7 +26,7 @@ import jax
 
 from repro.configs import registry
 from repro.models import api
-from repro.models.config import INPUT_SHAPES, InputShape
+from repro.models.config import INPUT_SHAPES
 
 COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")

@@ -59,10 +59,17 @@ def run_mbrl(args):
     rc = RunConfig(total_trajs=args.trajs, seed=args.seed,
                    collect_speed=args.collect_speed,
                    ema_weight=args.ema_weight,
-                   early_stop=not args.no_early_stop)
+                   early_stop=not args.no_early_stop,
+                   ckpt_dir=args.ckpt_dir)
+    if args.mode == "procs" and args.engine != "async":
+        raise SystemExit("--mode procs is only meaningful with "
+                         "--engine async")
     engines = {
+        # procs children rebuild the algo from plain configs, so the
+        # async engine gets them alongside the built algo object
         "async": lambda: AsyncTrainer(env, ens, algo, rc, mode=args.mode,
-                                      mesh=mesh, role_ratios=role_ratios),
+                                      mesh=mesh, role_ratios=role_ratios,
+                                      algo_cfg=acfg, pol_cfg=pol),
         "sequential": lambda: SequentialTrainer(env, ens, algo, rc),
         "partial-model": lambda: PartialAsyncModelPolicy(env, ens, algo, rc),
         "partial-data": lambda: PartialAsyncDataPolicy(env, ens, algo, rc),
@@ -74,6 +81,8 @@ def run_mbrl(args):
            "real_seconds": round(time.time() - t0, 1), "trace": trace}
     if getattr(tr, "roles", None) is not None:
         out["roles"] = tr.roles.describe()
+    if getattr(tr, "proc_info", None):
+        out["procs"] = tr.proc_info
     print(json.dumps(out["trace"][-1], indent=1))
     if args.out:
         with open(args.out, "w") as f:
@@ -129,7 +138,11 @@ def main():
     ap.add_argument("--engine", default="async",
                     choices=["async", "sequential", "partial-model",
                              "partial-data"])
-    ap.add_argument("--mode", default="event", choices=["event", "threads"])
+    ap.add_argument("--mode", default="event",
+                    choices=["event", "threads", "procs"],
+                    help="async engine execution: simulated (event), "
+                         "host threads, or separate OS processes with "
+                         "shared-memory parameter stores (procs)")
     ap.add_argument("--trajs", type=int, default=40)
     ap.add_argument("--n-models", type=int, default=5)
     ap.add_argument("--model-hidden", type=int, default=128)
@@ -144,6 +157,9 @@ def main():
                          "async engine over a device mesh (core/roles.py)")
     ap.add_argument("--role-ratios", default="1,2,1",
                     help="collector,model,policy share of the mesh axis")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="procs mode: where the supervisor snapshots "
+                         "params+versions (default: fresh temp dir)")
     ap.add_argument("--out", default=None)
     # lm
     ap.add_argument("--arch", default="glm4-9b")

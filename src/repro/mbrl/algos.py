@@ -17,8 +17,6 @@ the current dynamics model and take ONE policy-gradient (TRPO/PPO) step.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp

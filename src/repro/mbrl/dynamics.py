@@ -16,7 +16,6 @@ return the same next states."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -4,8 +4,6 @@ Operates on imagined (model) or real batches: dict with obs (N, D),
 act_pre (N, A), adv (N,), plus old params for the ratio."""
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ model with no other change.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,6 @@ cache is static after prefill (k/v projected from encoder output once).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

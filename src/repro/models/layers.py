@@ -15,7 +15,6 @@ pytrees (used eagerly only for small configs; the dry-run calls them under
 from __future__ import annotations
 
 import functools
-import math
 
 from jax import ad_checkpoint
 from typing import Any, Dict
@@ -25,7 +24,6 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.flash_attention import ops as attn_ops
-from repro.kernels.ssd import ops as ssd_ops
 from repro.models.config import ModelConfig, ShardCtx
 
 # --------------------------------------------------------------------------

@@ -23,7 +23,6 @@ kind "W"/"A"/"B" docstring there.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict
 
 import jax
@@ -33,7 +32,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import ssm as S
-from repro.models.config import InputShape, ModelConfig, ShardCtx
+from repro.models.config import ModelConfig, ShardCtx
 from repro.optim.optimizers import Optimizer, apply_updates
 
 AUX_COEF = 0.01
@@ -363,10 +362,16 @@ def make_train_step(cfg: ModelConfig, ctx: ShardCtx, opt: Optimizer,
     flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     dp_all = tuple(ctx.dp_axes)
 
+    def _axis_size(ax):
+        try:
+            return jax.lax.axis_size(ax)
+        except AttributeError:      # jax<0.6: psum of 1 == axis size
+            return jax.lax.psum(1, ax)      # (constant-folded by XLA)
+
     def _dp_idx():
         idx = jnp.zeros((), jnp.int32)
         for ax in dp_all:
-            idx = idx * jax.lax.axis_size(ax) + jax.lax.axis_index(ax)
+            idx = idx * _axis_size(ax) + jax.lax.axis_index(ax)
         return idx
 
     def z_slice(tree):

@@ -33,8 +33,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.kernels.gmm import ops as gmm_ops
 from repro.models.config import ModelConfig, ShardCtx
-from repro.models.layers import (_dense_init, matmul, psum_tp, reduce_tp,
-                                 rmsnorm, tp_index)
+from repro.models.layers import (_dense_init, reduce_tp, rmsnorm,
+                                 tp_index)
 
 
 def moe_strategy(cfg: ModelConfig, ctx: ShardCtx) -> str:

@@ -9,8 +9,7 @@ An ``Optimizer`` is an (init, update) pair operating on pytrees:
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -33,13 +33,12 @@ if _FLAG not in os.environ.get("XLA_FLAGS", ""):
                                + f" {_FLAG}=8").strip()
 
 import itertools
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 if jax.device_count() < 8:
     pytest.skip("needs 8 host devices (run via make test-mesh or "

@@ -10,8 +10,11 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
+
+# every test shells out to a 4-device subprocess that compiles a reduced
+# model (internal timeout 560s each)
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(600)]
 
 SELF_TEST = """
 import os

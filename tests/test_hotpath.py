@@ -13,7 +13,6 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
 from repro.mbrl import dynamics as DYN

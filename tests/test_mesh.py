@@ -20,6 +20,11 @@ from pathlib import Path
 
 import pytest
 
+# one subprocess runs the WHOLE 8-device suite on the first test (cached
+# for the rest), so the first test's cap must cover the subprocess's own
+# 1500s timeout rather than the 600s per-test default
+pytestmark = [pytest.mark.slow, pytest.mark.timeout(1600)]
+
 TESTS_DIR = Path(__file__).resolve().parent
 IMPL = TESTS_DIR / "_mesh_impl.py"
 _CACHE = {}

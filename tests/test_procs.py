@@ -1,0 +1,267 @@
+"""Process-isolated engine (mode="procs") — ISSUE 4 acceptance tests.
+
+Covers the IPC servers (shared-memory parameter store + trajectory
+queue), the spawn-based engine end-to-end against a same-seed threads
+run, the counter-instrumented zero-copy contract of unchanged pulls
+(in-process AND from a separate process), and checkpoint-based crash
+restart of the model worker.
+
+The end-to-end runs are marked ``slow`` (they spawn three jax processes
+that each compile their step functions) and carry generous per-test
+timeouts so a wedged child can never hang CI. See tests/README.md.
+"""
+import os
+import pickle
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AsyncTrainer, RunConfig
+from repro.core.servers import ProcDataServer, ShmParameterServer
+from repro.envs import make_env
+from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
+
+SEED = 0
+
+
+def small_cfgs(env):
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=32, n_models=2)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=16)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=15,
+                      n_models=2)
+    return ens, pol, acfg
+
+
+def all_finite(tree) -> bool:
+    return all(bool(np.isfinite(np.asarray(x)).all())
+               for x in jax.tree.leaves(tree))
+
+
+# ------------------------------------------------------- shm param server
+def test_shm_roundtrip_and_version_gating():
+    tmpl = {"a": np.zeros((4, 3), np.float32),
+            "b": {"c": np.zeros((2,), np.int32)}}
+    srv = ShmParameterServer(tmpl)
+    try:
+        assert srv.pull_if_newer(0) == (None, 0)
+        params = {"a": jnp.arange(12, dtype=jnp.float32).reshape(4, 3),
+                  "b": {"c": jnp.array([7, 9], jnp.int32)}}
+        assert srv.push(params) == 1
+        got, ver = srv.pull_if_newer(0)
+        assert ver == 1
+        np.testing.assert_array_equal(got["a"],
+                                      np.arange(12).reshape(4, 3))
+        np.testing.assert_array_equal(got["b"]["c"], [7, 9])
+        # push bumps the version; a second pull at current version gates
+        srv.push(params)
+        v, ver = srv.pull_if_newer(1)
+        assert v is not None and ver == 2
+        assert srv.pull_if_newer(2) == (None, 2)
+    finally:
+        srv.close()
+
+
+def test_shm_unchanged_pull_is_zero_copy():
+    """The PR 1 contract, counter-instrumented: an unchanged-version pull
+    performs ZERO array copies (one 8-byte version read only)."""
+    srv = ShmParameterServer({"w": np.zeros((128, 64), np.float32)})
+    try:
+        srv.push({"w": jnp.ones((128, 64), jnp.float32)})
+        got, ver = srv.pull_if_newer(0)
+        assert got is not None
+        copies_after_real_pull = srv.copies
+        assert copies_after_real_pull >= 1
+        for _ in range(200):
+            v, _ = srv.pull_if_newer(ver)
+            assert v is None
+        assert srv.copies == copies_after_real_pull, \
+            "unchanged-version pull copied arrays"
+    finally:
+        srv.close()
+
+
+def test_shm_exotic_dtypes_roundtrip():
+    """bf16 leaves ride the same storable-view codec as checkpoints."""
+    import ml_dtypes
+    srv = ShmParameterServer({"w": np.zeros((3,), ml_dtypes.bfloat16)})
+    try:
+        srv.push({"w": jnp.asarray([1.5, -2.0, 3.25], jnp.bfloat16)})
+        got, _ = srv.pull()
+        assert got["w"].dtype == np.dtype(ml_dtypes.bfloat16)
+        np.testing.assert_array_equal(got["w"].astype(np.float32),
+                                      [1.5, -2.0, 3.25])
+    finally:
+        srv.close()
+
+
+def test_shm_cross_process_pull_zero_copy(tmp_path):
+    """A SEPARATE process attaches by name, sees the pushed value, and
+    its unchanged pulls copy nothing (client-side counter)."""
+    srv = ShmParameterServer({"w": np.zeros((8, 8), np.float64)})
+    try:
+        srv.push({"w": np.full((8, 8), 3.0)})
+        handle = tmp_path / "handle.pkl"
+        handle.write_bytes(pickle.dumps(srv))
+        code = (
+            "import pickle, sys\n"
+            f"h = pickle.loads(open({str(handle)!r}, 'rb').read())\n"
+            "v, ver = h.pull_if_newer(0)\n"
+            "assert ver == 1 and float(v['w'].sum()) == 192.0\n"
+            "c0 = h.copies\n"
+            "for _ in range(100):\n"
+            "    x, _ = h.pull_if_newer(ver)\n"
+            "    assert x is None\n"
+            "print('COPIES', h.copies - c0)\n")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (
+            str(os.path.join(os.path.dirname(os.path.dirname(
+                os.path.abspath(__file__))), "src"))
+            + os.pathsep + env.get("PYTHONPATH", ""))
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, env=env,
+                           timeout=120)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "COPIES 0" in r.stdout, r.stdout
+    finally:
+        srv.close()
+
+
+def test_shm_reader_survives_writer_crash_mid_push():
+    """Sequence word stuck odd (writer died mid-copy): readers degrade to
+    their cache instead of hanging, and the next good push recovers."""
+    srv = ShmParameterServer({"w": np.zeros((4,), np.float32)})
+    try:
+        srv.push({"w": np.ones((4,), np.float32)})
+        _, ver = srv.pull_if_newer(0)
+        # simulate a writer killed mid-push: odd sequence word
+        srv._write_word(0, srv._read_word(0) + 1)
+        srv._write_word(8, ver + 1)      # version already bumped
+        v, got_ver = srv.pull_if_newer(ver)
+        assert v is None and got_ver == ver, "reader must degrade, not spin"
+        # restarted writer's push re-synchronises the seqlock
+        srv.push({"w": np.full((4,), 2.0, np.float32)})
+        v, _ = srv.pull_if_newer(ver)
+        assert v is not None and float(v["w"][0]) == 2.0
+    finally:
+        srv.close()
+
+
+def test_proc_data_server_push_drain():
+    import multiprocessing as mp
+    ds = ProcDataServer(mp.get_context("spawn"))
+    assert ds.drain() == [] and ds.total_pushed == 0
+    for i in range(3):
+        ds.push({"obs": np.full((5, 2), i, np.float32)})
+    assert ds.total_pushed == 3
+    deadline = time.monotonic() + 10     # queue feeder thread latency
+    items = []
+    while len(items) < 3 and time.monotonic() < deadline:
+        items.extend(ds.drain())
+    assert [int(t["obs"][0, 0]) for t in items] == [0, 1, 2]
+    assert ds.drain() == []
+    assert ds.total_pushed == 3          # drain moves, doesn't recount
+
+
+def test_procs_mode_requires_plain_configs():
+    env = make_env("pendulum")
+    ens, pol, acfg = small_cfgs(env)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    with pytest.raises(ValueError, match="algo_cfg"):
+        AsyncTrainer(env, ens, algo, RunConfig(), mode="procs")
+    with pytest.raises(ValueError, match="mesh"):
+        AsyncTrainer(env, ens, algo, RunConfig(), mode="procs",
+                     algo_cfg=acfg, pol_cfg=pol,
+                     mesh=jax.make_mesh((1,), ("data",)))
+
+
+# --------------------------------------------------------- end-to-end runs
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_procs_and_threads_runs_same_seed_both_train(tmp_path):
+    """ISSUE 4 acceptance: a small-config procs run and a threads run
+    from the same seed both complete and produce valid trained params
+    (finite, version past the warmup push)."""
+    env = make_env("pendulum")
+    ens, pol, acfg = small_cfgs(env)
+    rc = RunConfig(total_trajs=6, seed=SEED, min_warmup_trajs=2,
+                   eval_every_policy_steps=2, snapshot_every_s=1.0,
+                   ckpt_dir=str(tmp_path / "ckpt"),
+                   min_final_model_version=1, min_final_policy_version=3)
+    tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                      algo_cfg=acfg, pol_cfg=pol)
+    trace = tr.run()
+    assert tr.proc_info["trajs"] >= rc.total_trajs
+    assert tr.proc_info["model_version"] >= 1, "model never trained"
+    assert tr.proc_info["policy_version"] > 1, \
+        "policy version never moved past the warmup init push"
+    assert tr.proc_info["restarts"] == {"collector": 0, "model": 0,
+                                        "policy": 0}
+    assert all_finite(tr.policy_worker.state["policy"])
+    assert all_finite(tr.model_worker.params)
+    assert trace, "procs run recorded no eval rows"
+    times = [r["time"] for r in trace]
+    assert times == sorted(times) and trace[-1]["trajs"] >= rc.total_trajs
+
+    # same seed, same configs, threads engine
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    rc_t = RunConfig(total_trajs=6, seed=SEED, min_warmup_trajs=2,
+                     eval_every_policy_steps=2)
+    tr_t = AsyncTrainer(env, ens, algo, rc_t, mode="threads")
+    trace_t = tr_t.run()
+    assert trace_t and trace_t[-1]["trajs"] >= rc_t.total_trajs
+    assert tr_t.policy_server.version >= 1
+    assert all_finite(tr_t.policy_worker.state["policy"])
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_procs_model_worker_killed_restarts_from_snapshot(tmp_path):
+    """Kill the model-worker child mid-run: the trainer restarts it from
+    the latest snapshot and the run completes with a NEWER model version
+    than at kill time."""
+    env = make_env("pendulum")
+    ens, pol, acfg = small_cfgs(env)
+    rc = RunConfig(total_trajs=10, seed=SEED, min_warmup_trajs=2,
+                   eval_every_policy_steps=2, snapshot_every_s=0.5,
+                   pace_collection=True, collect_speed=2.0,
+                   ckpt_dir=str(tmp_path / "ckpt"),
+                   min_final_model_version=1, min_final_policy_version=3)
+    tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                      algo_cfg=acfg, pol_cfg=pol)
+    out = {}
+
+    def run():
+        out["trace"] = tr.run()
+
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    # wait until the model worker has published AND been snapshotted
+    from repro.checkpoint.io import latest_step
+    deadline = time.monotonic() + 600
+    while time.monotonic() < deadline:
+        srv = getattr(tr, "_proc_servers", None)
+        if srv and srv["model"].version >= 1 \
+                and latest_step(rc.ckpt_dir) is not None:
+            break
+        time.sleep(0.1)
+    else:
+        pytest.fail("model worker never published a version to snapshot")
+    kill_version = tr._proc_servers["model"].version
+    os.kill(tr._procs["model"].pid, signal.SIGKILL)
+    th.join(timeout=700)
+    assert not th.is_alive(), "run wedged after killing the model worker"
+    assert tr.proc_info["restarts"]["model"] >= 1, \
+        "supervisor recorded no model-worker restart"
+    assert tr.proc_info["model_version"] > kill_version, \
+        (tr.proc_info["model_version"], kill_version)
+    assert tr.proc_info["trajs"] >= rc.total_trajs
+    assert all_finite(tr.policy_worker.state["policy"])
+    assert all_finite(tr.model_worker.params)
+    assert out["trace"], "no eval trace after restart"

@@ -1,6 +1,5 @@
 """Async framework behaviour tests (the paper's core claims, miniaturised)."""
 import jax
-import pytest
 
 from repro.core import (AsyncTrainer, PartialAsyncDataPolicy,
                         PartialAsyncModelPolicy, RunConfig,

@@ -3,7 +3,6 @@ import threading
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core.servers import DataServer, LocalBuffer, ParameterServer

@@ -1,0 +1,100 @@
+"""Stdlib-only fallback for `make lint` on hosts without ruff.
+
+Approximates the enforced rule set (pyflakes F + E9, see pyproject.toml
+[tool.ruff]): syntax errors, unused imports (F401), and duplicate
+function/class definitions in one scope (F811-lite). It intentionally
+under-reports relative to ruff — CI installs the real linter from
+requirements-dev.txt; this keeps local `make lint` from silently
+becoming a no-op.
+
+Usage: python tools/lint_fallback.py DIR [DIR ...]
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+SKIP_DIRS = {"__pycache__", "results", ".git"}
+
+
+def _imported_names(node):
+    """(alias, lineno) pairs bound by an import statement."""
+    out = []
+    for alias in node.names:
+        name = alias.asname or alias.name.split(".")[0]
+        if name != "*":
+            out.append((name, node.lineno))
+    return out
+
+
+def check_file(path: Path):
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: E999 syntax error: {e.msg}"]
+
+    problems = []
+    # F401: names bound by module-level imports and never read anywhere.
+    # Conservative: any attribute/name/string occurrence counts as use
+    # (docstring-referenced re-exports are common in this repo).
+    imports = []
+    for node in tree.body:
+        if isinstance(node, (ast.Import, ast.ImportFrom)):
+            if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+                continue
+            imports.extend(_imported_names(node))
+    used = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            used.add(node.attr)
+    has_all = any(isinstance(n, ast.Assign) and any(
+        getattr(t, "id", None) == "__all__" for t in n.targets)
+        for n in tree.body)
+    is_pkg_init = path.name == "__init__.py"
+    if not (has_all or is_pkg_init):    # re-export surfaces exempt
+        for name, lineno in imports:
+            if name not in used:
+                problems.append(
+                    f"{path}:{lineno}: F401 '{name}' imported but unused")
+
+    # F811-lite: same def/class name bound twice in one scope
+    for scope in ast.walk(tree):
+        if not isinstance(scope, (ast.Module, ast.ClassDef,
+                                  ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        seen = {}
+        for node in getattr(scope, "body", []):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                if node.name in seen and not any(
+                        isinstance(d, ast.Name) and d.id in
+                        ("overload", "property")
+                        or isinstance(d, ast.Attribute)
+                        for d in node.decorator_list):
+                    problems.append(
+                        f"{path}:{node.lineno}: F811 redefinition of "
+                        f"'{node.name}' (line {seen[node.name]})")
+                seen[node.name] = node.lineno
+    return problems
+
+
+def main(argv) -> int:
+    roots = [Path(a) for a in argv] or [Path("src")]
+    problems = []
+    for root in roots:
+        files = [root] if root.is_file() else sorted(
+            p for p in root.rglob("*.py")
+            if not SKIP_DIRS & set(q.name for q in p.parents))
+        for f in files:
+            problems.extend(check_file(f))
+    for p in problems:
+        print(p)
+    print(f"lint_fallback: {len(problems)} problem(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
