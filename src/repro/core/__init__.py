@@ -3,9 +3,10 @@ from repro.core.roles import RoleSplit, split_roles
 from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
                                 SequentialTrainer, clear_eval_cache)
-from repro.core.servers import (DataServer, LocalBuffer, ParameterServer,
-                                ProcDataServer, ReplayBuffer,
-                                ShmParameterServer)
-from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
+from repro.core.servers import (BackpressureError, DataServer, LocalBuffer,
+                                ParameterServer, ProcDataServer,
+                                ReplayBuffer, ShmParameterServer)
+from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
+                                ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,
                                 ProcSpec, proc_worker_main)

@@ -23,7 +23,8 @@ import warnings
 from typing import Tuple
 
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec
+from jax.sharding import (Mesh, NamedSharding, PartitionSpec,
+                          SingleDeviceSharding)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -54,6 +55,17 @@ def batch_sharded(mesh: Mesh, axis: str | None = None) -> NamedSharding:
     """Leading (batch) dim sharded along one mesh axis, rest replicated."""
     axis = axis or mesh.axis_names[0]
     return NamedSharding(mesh, PartitionSpec(axis))
+
+
+def collector_sharding(mesh: Mesh, collector_id: int = 0):
+    """Placement of the ``collector_id``-th fleet member on the collector
+    sub-mesh: collectors are sequential control loops (one robot each),
+    so a fleet of N splits the sub-mesh one DEVICE per collector,
+    round-robin when N exceeds the device count — instead of every
+    collector pinning device 0 (the pre-fleet behaviour, which left the
+    rest of the sub-mesh idle)."""
+    return SingleDeviceSharding(
+        mesh.devices.flat[collector_id % mesh.devices.size])
 
 
 def num_shards(sharding: NamedSharding) -> int:

@@ -1,7 +1,11 @@
 """Training engines.
 
 * ``AsyncTrainer`` — the paper's contribution (Fig. 1a). Three execution
-  modes sharing the same worker objects:
+  modes sharing the same worker objects, each able to run a FLEET of
+  ``n_collectors`` data-collection workers (the paper's Fig. 4
+  parallel-collection story; Gu et al.'s multi-robot fan-out) against
+  the one global ``total_trajs`` criterion — ticket-claimed, so N
+  racing collectors finish with exactly ``total_trajs`` trajectories:
     - ``mode="event"``: deterministic discrete-event simulation. Each
       worker has a virtual-time cursor; the engine always advances the
       worker with the SMALLEST cursor, so relative speeds (robot control
@@ -43,20 +47,12 @@ import numpy as np
 from repro.core.roles import RoleSplit, split_roles
 from repro.core.servers import (DataServer, ParameterServer, ProcDataServer,
                                 ShmParameterServer)
-from repro.core.workers import (DataCollectionWorker, ModelLearningWorker,
+from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
+                                ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,
-                                ProcSpec, proc_worker_main)
+                                ProcSpec, default_burst, proc_worker_main)
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
-
-
-def eval_policy(env, params, key, n: int = 4) -> float:
-    def one(k):
-        tr = env.rollout(k, lambda p, s, kk: PI.deterministic_action(p, s),
-                         params)
-        return tr["rew"].sum()
-    return float(jnp.mean(jax.vmap(
-        lambda k: one(k))(jax.random.split(key, n))))
 
 
 @dataclasses.dataclass
@@ -74,11 +70,21 @@ class RunConfig:
     ema_weight: float = 0.9            # Fig. 5a
     early_stop: bool = True
     min_warmup_trajs: int = 4          # initial dataset before model pushes
-    max_model_epochs_idle: int = 0     # unused in async (kept for parity)
+    # collector fleet (ISSUE 5, the paper's Fig. 4 parallel-collection
+    # story): N data-collection workers in every mode, sharing the ONE
+    # global total_trajs criterion (ticket-claimed, so it lands exactly).
+    # collect_noise optionally sets per-collector exploration noise
+    # scales (cycled across the fleet); None = every collector at 1.0.
+    n_collectors: int = 1
+    collect_noise: Optional[tuple] = None
     # threads mode: sleep out each trajectory's robot time (horizon * dt /
     # collect_speed) so wall-clock reproduces the paper's real-robot rate
     # instead of racing simulated rollouts at compute speed
     pace_collection: bool = False
+    # procs mode: how long a collector may block on a full trajectory
+    # queue before ProcDataServer raises its descriptive
+    # BackpressureError (servers.py)
+    push_timeout_s: float = 30.0
     # procs mode: parent supervision — snapshot cadence for the
     # params+versions checkpoint (checkpoint/io.py), where to put it
     # (None -> fresh temp dir), and how many crash-restarts each worker
@@ -156,12 +162,22 @@ class AsyncTrainer:
                  mode: str = "event", mesh=None,
                  roles: Optional[RoleSplit] = None,
                  role_ratios=(1, 2, 1), role_axis: Optional[str] = None,
-                 algo_cfg=None, pol_cfg=None):
+                 algo_cfg=None, pol_cfg=None,
+                 n_collectors: Optional[int] = None,
+                 exploration: Optional[ExplorationSchedule] = None):
         """``mesh``/``roles``: run each worker against its own role
         sub-mesh (core/roles.py). Pass a ``roles`` RoleSplit directly, or
         a ``mesh`` to split by ``role_ratios`` along ``role_axis``.
         Default (both None) is the single-device behaviour — all existing
         callers and the event engine are untouched.
+
+        ``n_collectors``: size of the data-collection fleet (overrides
+        ``run_cfg.n_collectors``). All three modes run N collectors
+        against the one global ``total_trajs`` criterion; collector 0's
+        RNG stream is identical to the lone collector's, so N=1 is
+        bit-for-bit the pre-fleet engine. ``exploration`` plugs in a
+        per-collector :class:`~repro.core.workers.ExplorationSchedule`
+        (default: built from ``run_cfg.collect_noise``, or uniform 1.0).
 
         ``mode="procs"`` additionally requires ``algo_cfg``/``pol_cfg``
         (plain-config AlgoConfig/PolicyConfig): spawned children cannot
@@ -189,7 +205,16 @@ class AsyncTrainer:
         # fresh per-instance config: a shared mutable default would leak
         # one caller's tweaks into every later trainer
         run_cfg = RunConfig() if run_cfg is None else run_cfg
+        if n_collectors is not None:
+            run_cfg = dataclasses.replace(run_cfg,
+                                          n_collectors=int(n_collectors))
+        if run_cfg.n_collectors < 1:
+            raise ValueError(f"n_collectors must be >= 1, got "
+                             f"{run_cfg.n_collectors}")
         self.run_cfg = run_cfg
+        self.exploration = exploration if exploration is not None else (
+            ExplorationSchedule(tuple(run_cfg.collect_noise))
+            if run_cfg.collect_noise else ExplorationSchedule())
         self.mode = mode
         if roles is None and mesh is not None:
             roles = split_roles(mesh, ratios=tuple(role_ratios),
@@ -207,17 +232,31 @@ class AsyncTrainer:
             algo, self.policy_server, self.model_server, kp,
             mesh=roles.policy if roles else None,
             batch_axis=roles.axis if roles else None)
-        self.collector = DataCollectionWorker(
-            env, self.policy_server, self.data_server,
-            self.policy_worker.state["policy"], kc,
-            speed=run_cfg.collect_speed,
-            mesh=roles.collector if roles else None)
+        # the collector FLEET: every member shares the policy/data
+        # servers but owns its RNG stream (collector 0 = the lone
+        # collector's stream), its exploration rung, and — under a role
+        # mesh — its own device of the collector sub-mesh (round-robin).
+        # procs mode: the real fleet is rebuilt inside child processes
+        # from ProcSpec, so the parent keeps ONE mirror collector (the
+        # back-compat `collector` alias) instead of N idle jit wrappers.
+        n_local = 1 if mode == "procs" else run_cfg.n_collectors
+        self.collectors = [
+            DataCollectionWorker(
+                env, self.policy_server, self.data_server,
+                self.policy_worker.state["policy"], kc,
+                speed=run_cfg.collect_speed,
+                mesh=roles.collector if roles else None,
+                collector_id=i,
+                noise_scale=self.exploration.scale_for(i))
+            for i in range(n_local)]
+        self.collector = self.collectors[0]     # back-compat alias
         self.model_worker = ModelLearningWorker(
             ens_cfg, self.data_server, self.model_server, km,
             ema_weight=run_cfg.ema_weight, early_stop=run_cfg.early_stop,
             min_trajs=run_cfg.min_warmup_trajs,
             mesh=roles.model if roles else None,
-            batch_axis=roles.axis if roles else None)
+            batch_axis=roles.axis if roles else None,
+            burst=default_burst(run_cfg.n_collectors))
         self.recorder = _Recorder(env, run_cfg.eval_rollouts)
 
     # ------------------------------------------------------------- event
@@ -231,14 +270,23 @@ class AsyncTrainer:
     def _run_event(self):
         rc = self.run_cfg
         traj_t = (self.env.horizon * self.env.dt) / rc.collect_speed
-        # cursors: virtual time at which each worker becomes free
-        cur = {"collect": 0.0, "model": 0.0, "policy": 0.0}
+        # cursors: virtual time at which each worker becomes free. The
+        # FLEET gets one cursor per collector, so N collectors overlap
+        # in virtual time exactly like N robots (Fig. 4) — and the
+        # interleaving is deterministic per seed: ties resolve by dict
+        # insertion order, every collector owns its RNG stream, so the
+        # schedule (and the trace) is a pure function of the RunConfig.
+        cur = {f"collect:{i}": 0.0 for i in range(len(self.collectors))}
+        cur.update({"model": 0.0, "policy": 0.0})
+        collect_t = (lambda: max(cur[f"collect:{i}"]
+                                 for i in range(len(self.collectors))))
+        ds = self.data_server
         since_eval = 0
-        while self.collector.collected < rc.total_trajs:
+        while ds.total_pushed < rc.total_trajs:
             w = min(cur, key=cur.get)
             t = cur[w]
-            if w == "collect":
-                self.collector.step()
+            if w.startswith("collect:"):
+                self.collectors[int(w.split(":", 1)[1])].step()
                 cur[w] = t + traj_t
             elif w == "model":
                 out = self.model_worker.step()
@@ -255,11 +303,11 @@ class AsyncTrainer:
                         since_eval = 0
                         self._keval, k = jax.random.split(self._keval)
                         self.recorder.record(
-                            cur["collect"], self.collector.collected,
+                            collect_t(), ds.total_pushed,
                             self.policy_worker.state["policy"], k)
         # final eval at the end of collection
         self._keval, k = jax.random.split(self._keval)
-        self.recorder.record(cur["collect"], self.collector.collected,
+        self.recorder.record(collect_t(), ds.total_pushed,
                              self.policy_worker.state["policy"], k)
         return self.recorder.trace
 
@@ -268,18 +316,33 @@ class AsyncTrainer:
         rc = self.run_cfg
         stop = threading.Event()
         t0 = time.monotonic()   # all trace rows are relative to t0
+        ds = self.data_server
+        # fleet stopping criterion: each collector CLAIMS a slot before
+        # collecting (one lock in the server), so the run finishes with
+        # total_pushed EXACTLY total_trajs — N racing collectors can
+        # never overshoot the paper's global criterion
+        ds.set_target(rc.total_trajs)
 
-        def collect_loop():
-            while not stop.is_set() and \
-                    self.collector.collected < rc.total_trajs:
+        collect_errors: List[tuple] = []
+
+        def collect_loop(w):
+            while not stop.is_set() and ds.try_claim(w.collector_id):
                 t_step = time.monotonic()
-                dur = self.collector.step()
-                if rc.pace_collection:
+                try:
+                    dur = w.step()
+                except Exception as e:
+                    # a dead thread cannot refund its claimed ticket, so
+                    # the run would otherwise 'complete' one trajectory
+                    # short with only a stderr traceback — record it and
+                    # re-raise from the MAIN thread after the joins
+                    collect_errors.append((w.collector_id, e))
+                    stop.set()
+                    return
+                if rc.pace_collection and dur is not None:
                     # emulate the robot's control frequency: a trajectory
                     # occupies `dur` seconds of real time regardless of
                     # how fast the simulated rollout computes
                     time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
-            stop.set()
 
         def model_loop():
             while not stop.is_set():
@@ -294,21 +357,32 @@ class AsyncTrainer:
                     if n % rc.eval_every_policy_steps == 0:
                         self._keval, k = jax.random.split(self._keval)
                         self.recorder.record(
-                            time.monotonic() - t0, self.collector.collected,
+                            time.monotonic() - t0, ds.total_pushed,
                             self.policy_worker.state["policy"], k)
                 else:
                     time.sleep(0.002)
 
-        threads = [threading.Thread(target=f, daemon=True)
-                   for f in (collect_loop, model_loop, policy_loop)]
-        for th in threads:
+        collect_threads = [
+            threading.Thread(target=collect_loop, args=(w,), daemon=True,
+                             name=f"collect:{w.collector_id}")
+            for w in self.collectors]
+        learner_threads = [threading.Thread(target=f, daemon=True)
+                           for f in (model_loop, policy_loop)]
+        for th in collect_threads + learner_threads:
             th.start()
-        threads[0].join()
+        for th in collect_threads:  # every claimed slot has been pushed
+            th.join()               # once the whole fleet exits
         stop.set()
-        for th in threads[1:]:
+        for th in learner_threads:
             th.join(timeout=10)
+        if collect_errors:
+            cid, err = collect_errors[0]
+            raise RuntimeError(
+                f"collector {cid} failed mid-run; the fleet stopped at "
+                f"{ds.total_pushed}/{rc.total_trajs} trajectories"
+            ) from err
         self._keval, k = jax.random.split(self._keval)
-        self.recorder.record(time.monotonic() - t0, self.collector.collected,
+        self.recorder.record(time.monotonic() - t0, ds.total_pushed,
                              self.policy_worker.state["policy"], k)
         return self.recorder.trace
 
@@ -357,13 +431,18 @@ class AsyncTrainer:
             Path(tempfile.mkdtemp(prefix="repro_procs_ckpt_"))
         model_srv = ShmParameterServer(self.model_worker.params)
         policy_srv = ShmParameterServer(self.policy_worker.state["policy"])
-        data_srv = ProcDataServer(ctx)
+        # ticket-armed: N collector processes claim collection slots from
+        # the shared server, so the global criterion lands exactly even
+        # across collector crashes (the parent refunds in-flight tickets)
+        data_srv = ProcDataServer(ctx, n_collectors=rc.n_collectors,
+                                  target=rc.total_trajs,
+                                  push_timeout=rc.push_timeout_s)
         trace_q = ctx.Queue()
         stop = ctx.Event()
         ch = ProcChannels(model_srv, policy_srv, data_srv, trace_q, stop,
                           t0=time.monotonic())
         spec = ProcSpec(self.env, self.ens_cfg, self.algo_cfg, self.pol_cfg,
-                        rc, rc.seed)
+                        rc, rc.seed, exploration=self.exploration)
         # exposed for tests/benchmarks: kill-and-restart pokes _procs,
         # the hotpath bench reads server versions while the run is live
         self._proc_servers = {"model": model_srv, "policy": policy_srv,
@@ -399,16 +478,22 @@ class AsyncTrainer:
                     os.environ["PYTHONPATH"] = old_pp
             return p
 
-        restarts = {r: 0 for r in ("collector", "model", "policy")}
+        # the fleet: one supervised child per collector, each with its
+        # OWN restart budget ("collector:3" crashing repeatedly must not
+        # eat the other collectors' allowance)
+        collector_roles = [f"collector:{i}"
+                           for i in range(rc.n_collectors)]
+        restarts = {r: 0 for r in ["model", "policy"] + collector_roles}
         self._procs = {}
         last_snap = time.monotonic()
         snap_step = 0
         try:
-            for r in ("policy", "model", "collector"):
+            for r in ["policy", "model"] + collector_roles:
                 self._procs[r] = spawn(r)
             while True:
                 self._drain_trace(trace_q)
-                if self._procs["collector"].exitcode == 0 and \
+                if all(self._procs[r].exitcode == 0
+                       for r in collector_roles) and \
                         model_srv.version >= rc.min_final_model_version and \
                         policy_srv.version >= rc.min_final_policy_version:
                     break           # stopping criterion reached cleanly
@@ -422,6 +507,11 @@ class AsyncTrainer:
                                 f"than max_restarts={rc.max_restarts} "
                                 "times")
                         p.join()
+                        if role.startswith("collector:"):
+                            # a crash between claim and push would strand
+                            # a ticket and stall the criterion: refund it
+                            data_srv.refund_inflight(
+                                int(role.split(":", 1)[1]))
                         # restart from the LATEST snapshot: the child
                         # reloads params+versions via checkpoint/io.py
                         self._procs[role] = spawn(role, resume=True)
@@ -456,7 +546,10 @@ class AsyncTrainer:
                                        snap_step)
             self.proc_info.update({
                 "model_version": int(mv), "policy_version": int(pv),
-                "restarts": dict(restarts), "trajs": data_srv.total_pushed})
+                "restarts": dict(restarts), "trajs": data_srv.total_pushed,
+                "n_collectors": rc.n_collectors,
+                "noise_scales": [self.exploration.scale_for(i)
+                                 for i in range(rc.n_collectors)]})
         finally:
             stop.set()
             for p in self._procs.values():

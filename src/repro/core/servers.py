@@ -18,6 +18,14 @@ Two transport families share one interface:
   an unchanged version is ONE 8-byte read — zero array copies
   (counter-instrumented; asserted by tests/test_procs.py).
 
+Both data servers are MULTI-PRODUCER (collector fleets, ISSUE 5): N
+collectors push concurrently, the global trajectory counter stays exact
+under interleaved pushes and collector restarts, and the stopping
+criterion is ticket-based (``try_claim``) so a fleet can never overshoot
+``total_trajs``. The model worker's drain batches a burst of M
+trajectories into ONE compile-once padded scatter
+(``ReplayBuffer.add_trajs``) instead of M sequential ring writes.
+
 Hot-path invariants (see benchmarks/hotpath.py, which enforces them):
 
 * ``ParameterServer`` keeps values DEVICE-RESIDENT. ``push``/``pull``
@@ -140,6 +148,14 @@ class DataServer:
     """FIFO trajectory buffer server (Alg. 1 'Push data', Alg. 2 line 3:
     'move all trajectories from the remote buffer').
 
+    Explicitly MULTI-PRODUCER (collector fleets, ISSUE 5): any number of
+    collectors push concurrently; one lock makes ``total_pushed`` exact
+    under interleaved pushes. The global stopping criterion is enforced
+    with a ticket counter: ``set_target(n)`` arms it and ``try_claim()``
+    hands out at most ``n - total_pushed_at_arm_time`` collection slots,
+    so a fleet finishes with ``total_pushed == n`` EXACTLY — never an
+    overshoot from two collectors racing past the threshold.
+
     Zero-copy: pushed trajectories are stored by reference (jax arrays
     are immutable, so handing them across threads is safe) — no
     device->host materialisation on the hot path."""
@@ -148,12 +164,30 @@ class DataServer:
         self._lock = threading.Lock()
         self._items: List[Any] = []
         self._total = 0
+        self._target: Optional[int] = None
+        self._tickets = 0
 
-    def push(self, traj) -> int:
+    def push(self, traj, *, collector_id: int = 0) -> int:
         with self._lock:
             self._items.append(traj)
             self._total += 1
             return self._total
+
+    def set_target(self, total: int) -> None:
+        """Arm the stopping criterion: from now on ``try_claim`` grants
+        exactly ``total - total_pushed`` more collection slots."""
+        with self._lock:
+            self._target = int(total)
+            self._tickets = self._total
+
+    def try_claim(self, collector_id: int = 0) -> bool:
+        """Reserve one collection slot. Returns False once every slot up
+        to the armed target is claimed (the collector should stop)."""
+        with self._lock:
+            if self._target is not None and self._tickets >= self._target:
+                return False
+            self._tickets += 1
+            return True
 
     def drain(self) -> List[Any]:
         """Move ALL pending trajectories to the caller (empties server)."""
@@ -368,24 +402,110 @@ class ShmParameterServer:
             self._shm = None
 
 
+class BackpressureError(RuntimeError):
+    """A ``ProcDataServer.push`` timed out on a full trajectory queue —
+    the consumer (the model worker's drain -> ring-write path) is not
+    keeping up with the collector fleet."""
+
+
 class ProcDataServer:
-    """Cross-process DataServer: a bounded trajectory queue. The
-    collector pushes host-materialised trajectories; the model worker
-    drains them into its ring ReplayBuffer (Alg. 2 'move all
-    trajectories from the remote buffer'). ``total_pushed`` is a shared
-    counter so a RESTARTED collector resumes the global trajectory
-    count instead of re-collecting from zero."""
+    """Cross-process DataServer: a bounded trajectory queue. Collectors
+    push host-materialised trajectories; the model worker drains them
+    into its ring ReplayBuffer (Alg. 2 'move all trajectories from the
+    remote buffer').
 
-    def __init__(self, ctx, *, maxsize: int = 512):
+    Explicitly MULTI-PRODUCER (collector fleets, ISSUE 5): ``total_pushed``
+    and the stopping-criterion tickets live behind ONE shared lock, so the
+    global trajectory count stays exact under concurrent pushes from any
+    number of collector processes AND across collector crash/restarts (a
+    restarted collector resumes the global count instead of re-collecting
+    from zero). ``try_claim(i)`` reserves a collection slot and marks
+    collector ``i`` in-flight; ``push`` clears the mark. A collector
+    killed between claim and push leaves its in-flight flag set — the
+    supervising parent calls ``refund_inflight(i)`` when it respawns the
+    worker, so a crash can never strand a ticket (stall) or push the
+    COUNTER past the target (overshoot). One documented residual window:
+    a kill between the queue enqueue and the counter increment leaves a
+    refundable ticket whose trajectory already landed in the queue, so
+    the replacement's push puts one EXTRA trajectory in the training
+    stream — ``total_pushed`` (the stopping criterion) stays exact, the
+    model just trains on target+1 trajectories. Closing it would need a
+    transactional queue; the window is microseconds inside ``push``. A
+    second residual window, inherited from the PR 4 counter: the ticket
+    lock (and the mp.Queue's internal writer lock) is a plain
+    non-robust mp lock, so a kill while one is held — a few counter
+    updates, or a feeder-thread pipe write — leaves it held and stalls
+    the other collectors. That failure is LOUD, not silent: stalled
+    pushes hit ``push_timeout`` and raise :class:`BackpressureError`,
+    the crashing collectors burn ``max_restarts`` and the parent fails
+    the run. The shm parameter path stays deliberately lock-free (see
+    ShmParameterServer).
+
+    Backpressure: a push against a full queue waits ``push_timeout``
+    seconds, then raises :class:`BackpressureError` naming the queue size
+    and the slowest consumer instead of surfacing a bare ``queue.Full``.
+    The timeout is a constructor argument threaded from
+    ``RunConfig.push_timeout_s``."""
+
+    def __init__(self, ctx, *, n_collectors: int = 1, maxsize: int = 512,
+                 push_timeout: float = 30.0, target: Optional[int] = None):
+        self.n_collectors = max(int(n_collectors), 1)
+        self.maxsize = int(maxsize)
+        self.push_timeout = float(push_timeout)
+        self._target = None if target is None else int(target)
         self._q = ctx.Queue(maxsize)
-        self._total = ctx.Value("q", 0)
+        # one lock guards ALL counters: total / tickets / in-flight flags
+        # must move together for the criterion to be exact under
+        # concurrent producers and supervisor refunds
+        self._lock = ctx.Lock()
+        self._total = ctx.Value("q", 0, lock=False)
+        self._tickets = ctx.Value("q", 0, lock=False)
+        self._inflight = ctx.Array("b", self.n_collectors, lock=False)
 
-    def push(self, traj, *, timeout: Optional[float] = 30.0) -> int:
+    def push(self, traj, *, collector_id: int = 0,
+             timeout: Optional[float] = None) -> int:
         host = jax.tree.map(np.asarray, traj)   # process boundary
-        self._q.put(host, timeout=timeout)
-        with self._total.get_lock():
+        timeout = self.push_timeout if timeout is None else timeout
+        try:
+            self._q.put(host, timeout=timeout)
+        except _queue.Full:
+            raise BackpressureError(
+                f"trajectory queue full: collector {collector_id} waited "
+                f"{timeout:.1f}s to push and the queue still holds "
+                f"{self.maxsize} (maxsize) undrained trajectories. The "
+                "slowest consumer is the model worker's drain->ring-write "
+                "path (ModelLearningWorker._refresh_data); raise "
+                "RunConfig.push_timeout_s, enlarge the queue, or check "
+                "whether the model process is wedged/compiling."
+            ) from None
+        with self._lock:
             self._total.value += 1
+            self._inflight[collector_id % self.n_collectors] = 0
             return self._total.value
+
+    def try_claim(self, collector_id: int = 0) -> bool:
+        """Reserve one collection slot toward the global target; marks
+        the collector in-flight until its push lands. False once the
+        target is fully claimed (no target configured: always True)."""
+        with self._lock:
+            if self._target is not None \
+                    and self._tickets.value >= self._target:
+                return False
+            self._tickets.value += 1
+            self._inflight[collector_id % self.n_collectors] = 1
+            return True
+
+    def refund_inflight(self, collector_id: int) -> bool:
+        """Supervisor hook: return the ticket of a collector that died
+        between claim and push (its in-flight flag is still set). Called
+        by the parent when respawning collector ``collector_id``."""
+        with self._lock:
+            i = collector_id % self.n_collectors
+            if self._inflight[i]:
+                self._inflight[i] = 0
+                self._tickets.value -= 1
+                return True
+            return False
 
     def drain(self) -> List[Any]:
         items: List[Any] = []
@@ -397,7 +517,8 @@ class ProcDataServer:
 
     @property
     def total_pushed(self) -> int:
-        return int(self._total.value)
+        with self._lock:
+            return int(self._total.value)
 
     def __len__(self) -> int:
         try:
@@ -420,6 +541,29 @@ def _ring_write_impl(storage, traj, cursor):
 
 
 _ring_write = jax.jit(_ring_write_impl, donate_argnums=(0,))
+
+
+def _ring_write_burst_impl(storage, burst, n_rows, cursor):
+    """Scatter a PADDED burst of stacked trajectories in ONE compiled
+    write (collector fleets, ISSUE 5): ``burst`` leaves are
+    ``(B, H, ...)`` stacks of which only the first ``n_rows`` flattened
+    transitions (= M * H for M real trajectories) are valid. Padding
+    rows are routed to index ``capacity`` — out of bounds — and DROPPED
+    by the scatter (``mode="drop"``), so the shapes are static: one
+    compile covers every burst size up to B, and a fleet's drain lands
+    as one scatter instead of M sequential ring writes."""
+    cap = jax.tree.leaves(storage)[0].shape[0]
+    flat = jax.tree.map(
+        lambda t: t.reshape((t.shape[0] * t.shape[1],) + t.shape[2:]),
+        burst)
+    rows = jax.tree.leaves(flat)[0].shape[0]
+    r = jnp.arange(rows)
+    idx = jnp.where(r < n_rows, (cursor + r) % cap, cap)
+    return jax.tree.map(
+        lambda buf, t: buf.at[idx].set(t, mode="drop"), storage, flat)
+
+
+_ring_write_burst = jax.jit(_ring_write_burst_impl, donate_argnums=(0,))
 
 
 class ReplayBuffer:
@@ -445,8 +589,10 @@ class ReplayBuffer:
     """
 
     def __init__(self, capacity: int, *, val_capacity: Optional[int] = None,
-                 holdout_frac: float = 0.2, sharding=None):
+                 holdout_frac: float = 0.2, sharding=None,
+                 burst_capacity: int = 8):
         self._sharding = sharding
+        self.burst_capacity = max(int(burst_capacity), 1)
         if sharding is not None:
             from repro.core.roles import num_shards, replicated, round_up
             nsh = num_shards(sharding)
@@ -457,9 +603,13 @@ class ReplayBuffer:
             self._traj_sharding = replicated(sharding.mesh)
             self._write = jax.jit(_ring_write_impl, donate_argnums=(0,),
                                   out_shardings=sharding)
+            self._write_burst = jax.jit(_ring_write_burst_impl,
+                                        donate_argnums=(0,),
+                                        out_shardings=sharding)
         else:
             self._traj_sharding = None
             self._write = _ring_write
+            self._write_burst = _ring_write_burst
         self.capacity = int(capacity)
         self.val_capacity = int(val_capacity if val_capacity is not None
                                 else max(capacity // 4, 1))
@@ -495,19 +645,15 @@ class ReplayBuffer:
             return traj, h
         return {k: v[-cap:] for k, v in traj.items()}, cap
 
-    def add_traj(self, traj) -> None:
-        """Insert one trajectory (dict of (H, ...) arrays). Every
-        ``1/holdout_frac``-th trajectory goes to the validation ring."""
-        if self._train is None:
-            self._alloc(traj)
-        self._trajs += 1
+    def _write_one(self, traj, val: bool) -> None:
+        """Single-trajectory compiled scatter into one ring (the M=1
+        path; also the fallback for mixed horizons / traj > capacity)."""
         h = int(jax.tree.leaves(traj)[0].shape[0])
-        traj = {k: jnp.asarray(v) for k, v in traj.items()}
         if self._traj_sharding is not None:
             # cross-role ingestion: replicate the trajectory onto the
             # owning sub-mesh (explicit device->device, no host hop)
             traj = jax.device_put(traj, self._traj_sharding)
-        if self._every and self._trajs % self._every == 0:
+        if val:
             traj, h = self._fit(traj, h, self.val_capacity)
             self._val = self._write(self._val, traj,
                                     self._val_cursor % self.val_capacity)
@@ -520,9 +666,92 @@ class ReplayBuffer:
             self._cursor = (self._cursor + h) % self.capacity
             self._written += h
 
+    def _write_chunk(self, chunk, h: int, val: bool) -> None:
+        """One compiled burst scatter for ``len(chunk)`` equal-horizon
+        trajectories: stack to (M, H, ...), zero-pad to the fixed
+        ``burst_capacity`` (padding rows are dropped by index), write."""
+        b, m = self.burst_capacity, len(chunk)
+        stacked = {k: jnp.stack([t[k] for t in chunk]) for k in chunk[0]}
+        if m < b:
+            stacked = {k: jnp.concatenate(
+                [v, jnp.zeros((b - m,) + v.shape[1:], v.dtype)])
+                for k, v in stacked.items()}
+        if self._traj_sharding is not None:
+            stacked = jax.device_put(stacked, self._traj_sharding)
+        rows = m * h
+        if val:
+            self._val = self._write_burst(
+                self._val, stacked, rows,
+                self._val_cursor % self.val_capacity)
+            self._val_cursor = (self._val_cursor + rows) % self.val_capacity
+            self._val_written += rows
+        else:
+            self._train = self._write_burst(
+                self._train, stacked, rows, self._cursor % self.capacity)
+            self._cursor = (self._cursor + rows) % self.capacity
+            self._written += rows
+
+    def _burst_to_ring(self, group, val: bool) -> None:
+        """Write a group of trajectories destined for ONE ring in as few
+        compiled scatters as possible. Chunks are capped at
+        ``burst_capacity`` trajectories AND at ``capacity`` valid rows:
+        within a chunk every target index is distinct (scatter order
+        irrelevant), and a later chunk overwrites an earlier one exactly
+        like sequential FIFO writes — bit-identical ring contents."""
+        cap = self.val_capacity if val else self.capacity
+        i = 0
+        while i < len(group):
+            h0 = int(jax.tree.leaves(group[i])[0].shape[0])
+            chunk, rows = [group[i]], h0
+            i += 1
+            while i < len(group) and len(chunk) < self.burst_capacity:
+                h = int(jax.tree.leaves(group[i])[0].shape[0])
+                if h != h0 or rows + h > cap:
+                    break
+                chunk.append(group[i])
+                rows += h
+                i += 1
+            if len(chunk) == 1:
+                self._write_one(chunk[0], val)
+            else:
+                self._write_chunk(chunk, h0, val)
+
+    def add_traj(self, traj) -> None:
+        """Insert one trajectory (dict of (H, ...) arrays). Every
+        ``1/holdout_frac``-th trajectory goes to the validation ring."""
+        if self._train is None:
+            self._alloc(traj)
+        self._trajs += 1
+        traj = {k: jnp.asarray(v) for k, v in traj.items()}
+        self._write_one(
+            traj, val=bool(self._every and self._trajs % self._every == 0))
+
+    def add_trajs(self, trajs) -> None:
+        """Insert a BURST of trajectories (a fleet drain) with one
+        compiled scatter per ring chunk instead of one write per
+        trajectory. The deterministic train/val interleave advances
+        per-trajectory in arrival order, exactly as repeated
+        ``add_traj`` calls would."""
+        trajs = list(trajs)
+        if not trajs:
+            return
+        if self._train is None:
+            self._alloc(trajs[0])
+        groups = {False: [], True: []}
+        for traj in trajs:
+            self._trajs += 1
+            traj = {k: jnp.asarray(v) for k, v in traj.items()}
+            dest = bool(self._every and self._trajs % self._every == 0)
+            groups[dest].append(traj)
+        self._burst_to_ring(groups[False], val=False)
+        self._burst_to_ring(groups[True], val=True)
+
     def extend(self, trajs) -> int:
-        for t in trajs:
-            self.add_traj(t)
+        trajs = list(trajs)
+        if len(trajs) == 1:
+            self.add_traj(trajs[0])
+        elif trajs:
+            self.add_trajs(trajs)
         return len(trajs)
 
     def train_view(self) -> Tuple[Optional[Dict[str, jax.Array]], int]:

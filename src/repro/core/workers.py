@@ -2,7 +2,11 @@
 the MINIMAL unit of work (one rollout / one model epoch / one policy
 gradient step). The same worker objects run either as real threads
 (production) or inside the deterministic discrete-event engine
-(benchmarks) — see runtime.py.
+(benchmarks) — see runtime.py. Data collection is a FLEET (ISSUE 5):
+any number of ``DataCollectionWorker`` instances — distinct RNG streams
+(``collector_key``), pluggable per-collector exploration
+(``ExplorationSchedule``), one device each on the collector sub-mesh —
+push into the same multi-producer data server.
 
 Hot-path invariants (enforced by tests/test_hotpath.py and
 benchmarks/hotpath.py):
@@ -34,6 +38,7 @@ device-resident in every mode.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Optional
 
@@ -65,15 +70,81 @@ class WorkerTimes:
     policy_step: float = 0.5
 
 
+@dataclasses.dataclass(frozen=True)
+class ExplorationSchedule:
+    """Pluggable per-collector exploration for a fleet (ISSUE 5): each
+    collector samples with its own action-noise scale — the paper's
+    exploration mechanism fanned out heterogeneously, like the
+    multi-robot setup of Gu et al. (2016). Scales cycle when the fleet
+    is larger than the tuple; scale 1.0 is exactly the single-collector
+    behaviour. Plain frozen dataclass of floats: picklable through the
+    spawn boundary (``ProcSpec``)."""
+    noise_scales: tuple = (1.0,)
+
+    def scale_for(self, collector_id: int) -> float:
+        return float(self.noise_scales[collector_id
+                                       % len(self.noise_scales)])
+
+    @classmethod
+    def ladder(cls, n_collectors: int, lo: float = 0.75,
+               hi: float = 1.5) -> "ExplorationSchedule":
+        """Evenly spaced lo..hi noise ladder across the fleet; collector
+        0 keeps scale 1.0 so its stream stays comparable to a lone
+        collector. A two-collector fleet gets (1.0, hi): with one varied
+        rung, the wider-exploring endpoint is the one worth adding."""
+        if n_collectors <= 1:
+            return cls((1.0,))
+        k = n_collectors - 1            # varied rungs
+        if k == 1:
+            return cls((1.0, hi))
+        rest = tuple(lo + (hi - lo) * i / (k - 1) for i in range(k))
+        return cls((1.0,) + rest)
+
+
+def collector_key(key, collector_id: int):
+    """Per-collector RNG stream: collector 0 keeps the engine's base
+    collector key UNTOUCHED (so a fleet of one is bit-identical to the
+    pre-fleet engine); every other collector folds its id in."""
+    return key if collector_id == 0 else jax.random.fold_in(
+        key, collector_id)
+
+
+def default_burst(n_collectors: int) -> int:
+    """Drain burst capacity for a fleet of N: the one heuristic shared
+    by the in-process engines and the procs-mode child model worker."""
+    return max(8, 2 * int(n_collectors))
+
+
+@functools.lru_cache(maxsize=64)
+def _rollout_jit(env, noise_scale: float):
+    """One compiled rollout per (env value, noise scale) — N same-scale
+    fleet members share a single trace/compile instead of paying N
+    identical ones (envs are small frozen dataclasses, so value-equal
+    envs share; bounded like runtime._EVAL_CACHE). Per-device
+    executables are jax's own cache, keyed on input placement."""
+    if noise_scale == 1.0:
+        sampler = PI.sample_action      # bit-identical lone-collector
+    else:                               # path, and no spurious * 1.0
+        def sampler(p, s, k):
+            return PI.sample_action_scaled(p, s, k, noise_scale)
+    return jax.jit(lambda p, k: env.rollout(k, sampler, p))
+
+
 class DataCollectionWorker:
     """Algorithm 1. Pull policy θ -> collect ONE trajectory -> push.
 
     The pull is version-gated: the worker keeps a device-resident policy
-    cache and only swaps it when the server holds a newer version."""
+    cache and only swaps it when the server holds a newer version.
+
+    Fleet-aware: ``collector_id`` selects this collector's RNG stream,
+    its device within the collector sub-mesh (round-robin, see
+    ``roles.collector_sharding``), and — via ``noise_scale`` — its rung
+    on the fleet's exploration schedule."""
 
     def __init__(self, env, policy_server: ParameterServer,
                  data_server: DataServer, init_policy_params, key,
-                 *, speed: float = 1.0, mesh=None):
+                 *, speed: float = 1.0, mesh=None, collector_id: int = 0,
+                 noise_scale: float = 1.0):
         """``init_policy_params=None`` (procs mode): the collector has no
         in-process policy worker to borrow initial params from — it idles
         (``step`` returns None) until the policy process publishes
@@ -81,36 +152,46 @@ class DataCollectionWorker:
         self.env = env
         self.policy_server = policy_server
         self.data_server = data_server
-        self._key = key
+        self.collector_id = int(collector_id)
+        self.noise_scale = float(noise_scale)
+        self._key = collector_key(key, self.collector_id)
         self._policy_cache = (None if init_policy_params is None else
                               jax.tree.map(jnp.asarray, init_policy_params))
         self._policy_ver = 0
         self.speed = speed  # >1: faster collection (Fig. 5b)
         self.collected = 0
-        # the collector is a sequential control loop (the robot): it runs
-        # on ONE device of its sub-mesh; pulls land there directly
+        # each collector is a sequential control loop (one robot): it
+        # runs on ONE device of the collector sub-mesh; a fleet spreads
+        # round-robin across the sub-mesh's devices, pulls land there
         self._sharding = None
         if mesh is not None:
-            self._sharding = jax.sharding.SingleDeviceSharding(
-                mesh.devices.flat[0])
+            self._sharding = ROLES.collector_sharding(mesh,
+                                                      self.collector_id)
             if self._policy_cache is not None:
                 self._policy_cache = jax.device_put(self._policy_cache,
                                                     self._sharding)
-        self._rollout = jax.jit(
-            lambda p, k: env.rollout(k, PI.sample_action, p))
+        self._rollout = _rollout_jit(env, self.noise_scale)
+
+    def poll_policy(self) -> bool:
+        """Refresh the policy cache (version-gated) WITHOUT collecting.
+        True once a policy is available — procs-mode collectors spin on
+        this during warmup so a claimed collection slot is always
+        fulfilled by the following ``step``."""
+        fresh, self._policy_ver = self.policy_server.pull_if_newer(
+            self._policy_ver, sharding=self._sharding)
+        if fresh is not None:
+            self._policy_cache = _to_device(fresh)
+        return self._policy_cache is not None
 
     def step(self) -> Optional[float]:
         """One trajectory; returns its robot-time duration, or None when
         no policy has been published yet (procs-mode warmup)."""
-        fresh, self._policy_ver = self.policy_server.pull_if_newer(
-            self._policy_ver, sharding=self._sharding)  # Pull (gated)
-        if fresh is not None:
-            self._policy_cache = _to_device(fresh)
-        if self._policy_cache is None:
+        if not self.poll_policy():                      # Pull (gated)
             return None
         self._key, k = jax.random.split(self._key)
         traj = self._rollout(self._policy_cache, k)     # Step
-        self.data_server.push(traj)                     # Push
+        self.data_server.push(traj,
+                              collector_id=self.collector_id)  # Push
         self.collected += 1
         return (self.env.horizon * self.env.dt) / self.speed
 
@@ -128,11 +209,16 @@ class ModelLearningWorker:
                  data_server: DataServer, model_server: ParameterServer,
                  key, *, max_trajs: int = 200, ema_weight: float = 0.9,
                  early_stop: bool = True, min_trajs: int = 4,
-                 mesh=None, batch_axis: Optional[str] = None):
+                 mesh=None, batch_axis: Optional[str] = None,
+                 burst: int = 8):
+        """``burst``: ring-write burst capacity — a drain of M
+        trajectories (a fleet pushes many between epochs) lands in
+        ceil(M/burst) compiled scatters instead of M."""
         self.cfg = ens_cfg
         self.data_server = data_server
         self.model_server = model_server
         self.max_trajs = max_trajs
+        self.burst = max(int(burst), 1)
         self.buffer: Optional[ReplayBuffer] = None    # lazy: needs horizon
         self._key, k0 = jax.random.split(key)
         self.params = DYN.init_ensemble(ens_cfg, k0)
@@ -162,7 +248,8 @@ class ModelLearningWorker:
         capacity = self.max_trajs * horizon
         # ReplayBuffer rounds a sharded capacity up to the shard count
         # itself; read the final value back for the trainer's grid
-        self.buffer = ReplayBuffer(capacity, sharding=self._batch_shard)
+        self.buffer = ReplayBuffer(capacity, sharding=self._batch_shard,
+                                   burst_capacity=self.burst)
         opt, self._train_epoch, self._val_loss, self._update_norm = \
             DYN.make_ring_trainer(self.cfg, self.buffer.capacity,
                                   batch_sharding=self._batch_shard)
@@ -267,13 +354,16 @@ class PolicyImprovementWorker:
 class ProcSpec:
     """Everything a spawned worker needs to rebuild its role locally:
     plain-dataclass configs + the shared seed. The child derives the
-    same per-role keys as the in-process engines (split(key(seed), 4))."""
+    same per-role keys as the in-process engines (split(key(seed), 4);
+    fleet collectors additionally fold their id in — see
+    ``collector_key``)."""
     env: Any                    # frozen env dataclass (picklable)
     ens_cfg: DYN.EnsembleConfig
     algo_cfg: Any               # mbrl.AlgoConfig
     pol_cfg: PI.PolicyConfig
     run_cfg: Any                # core.RunConfig
     seed: int
+    exploration: Any = None     # ExplorationSchedule (or None: all 1.0)
 
 
 @dataclasses.dataclass
@@ -307,13 +397,24 @@ def _load_snapshot(resume_dir, spec):
     return ckpt_io.restore(resume_dir, template)
 
 
-def _proc_collector(spec, ch, key):
+def _proc_collector(spec, ch, key, collector_id: int = 0):
     rc = spec.run_cfg
+    sched = spec.exploration or ExplorationSchedule()
     w = DataCollectionWorker(spec.env, ch.policy_server, ch.data, None,
-                             key, speed=rc.collect_speed)
-    # restart-safe stopping criterion: resume the GLOBAL trajectory count
-    w.collected = ch.data.total_pushed
-    while not ch.stop.is_set() and w.collected < rc.total_trajs:
+                             key, speed=rc.collect_speed,
+                             collector_id=collector_id,
+                             noise_scale=sched.scale_for(collector_id))
+    # warmup: don't claim a collection slot until a policy exists — a
+    # claimed ticket must always be fulfilled by the very next step, or
+    # the fleet's exact stopping criterion would stall on it
+    while not ch.stop.is_set() and not w.poll_policy():
+        time.sleep(0.005)
+    # restart-safe stopping criterion: tickets live in the shared
+    # ProcDataServer, so a restarted collector resumes the GLOBAL count
+    # (the parent refunds the ticket of a crash-interrupted trajectory)
+    while not ch.stop.is_set():
+        if not ch.data.try_claim(collector_id):
+            break                   # global target fully claimed: done
         t_step = time.monotonic()
         try:
             dur = w.step()
@@ -321,10 +422,7 @@ def _proc_collector(spec, ch, key):
             if ch.stop.is_set():    # queue torn down mid-push: clean exit
                 break
             raise
-        if dur is None:             # policy process hasn't published yet
-            time.sleep(0.005)
-            continue
-        if rc.pace_collection:
+        if rc.pace_collection and dur is not None:
             # robot control frequency: one trajectory occupies `dur`
             # seconds of real time however fast the simulation computes
             time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
@@ -335,7 +433,8 @@ def _proc_model(spec, ch, key, resume_dir):
     w = ModelLearningWorker(spec.ens_cfg, ch.data, ch.model_server, key,
                             ema_weight=rc.ema_weight,
                             early_stop=rc.early_stop,
-                            min_trajs=rc.min_warmup_trajs)
+                            min_trajs=rc.min_warmup_trajs,
+                            burst=default_burst(rc.n_collectors))
     snap, _ = _load_snapshot(resume_dir, spec)
     if snap is not None:
         # crash restart: resume from the parent's latest checkpoint and
@@ -388,12 +487,15 @@ def proc_worker_main(role: str, spec: ProcSpec, ch: ProcChannels,
                      resume_dir: Optional[str] = None) -> None:
     """Picklable child entrypoint (spawn context). Each child initialises
     its OWN jax backend on import — nothing jax crosses the process
-    boundary except host arrays through the IPC servers."""
+    boundary except host arrays through the IPC servers. Fleet
+    collectors are addressed ``"collector:<id>"``; the id picks the
+    collector's RNG stream and exploration rung."""
     key = jax.random.key(spec.seed)
     _kc, _km, _kp, _keval = jax.random.split(key, 4)
     try:
-        if role == "collector":
-            _proc_collector(spec, ch, _kc)
+        if role == "collector" or role.startswith("collector:"):
+            cid = int(role.split(":", 1)[1]) if ":" in role else 0
+            _proc_collector(spec, ch, _kc, cid)
         elif role == "model":
             _proc_model(spec, ch, _km, resume_dir)
         elif role == "policy":

@@ -265,22 +265,32 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
-def dryrun_roles(*, multi_pod: bool = False,
-                 ratios=(1, 2, 1), verbose: bool = True) -> dict:
+def dryrun_roles(*, multi_pod: bool = False, ratios=(1, 2, 1),
+                 n_collectors: int = 1, verbose: bool = True) -> dict:
     """Role-split sanity for the async MBRL pod path: split the
     production mesh into collector/model/policy sub-meshes
     (core/roles.py) and report their shapes and the role shardings the
-    workers would jit against. Pure mesh bookkeeping — nothing is
-    allocated (512 forced host devices stand in for the pod)."""
-    from repro.core.roles import batch_sharded, replicated, split_roles
+    workers would jit against — plus how a collector FLEET of
+    ``n_collectors`` spreads round-robin over the collector sub-mesh's
+    devices. Pure mesh bookkeeping — nothing is allocated (512 forced
+    host devices stand in for the pod)."""
+    from repro.core.roles import (batch_sharded, collector_sharding,
+                                  replicated, split_roles)
     from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=multi_pod)
     roles = split_roles(mesh, ratios=tuple(ratios))
+    fleet = {
+        f"collector:{i}": str(next(iter(
+            collector_sharding(roles.collector, i).device_set)))
+        for i in range(n_collectors)}
     rec = {"mesh": "2x16x16" if multi_pod else "16x16",
            "ratios": list(ratios), "roles": roles.describe(),
            "model_batch_sharding":
                str(batch_sharded(roles.model, roles.axis)),
-           "policy_param_sharding": str(replicated(roles.policy))}
+           "policy_param_sharding": str(replicated(roles.policy)),
+           "n_collectors": n_collectors,
+           "fleet_devices": fleet,
+           "collector_devices_total": int(roles.collector.devices.size)}
     if verbose:
         print(json.dumps(rec, indent=1))
     return rec
@@ -298,6 +308,9 @@ def main():
                     help="report the async-MBRL role split of the "
                          "production mesh and exit")
     ap.add_argument("--role-ratios", default="1,2,1")
+    ap.add_argument("--n-collectors", type=int, default=4,
+                    help="with --roles: report the fleet's round-robin "
+                         "device assignment on the collector sub-mesh")
     ap.add_argument("--out", default="dryrun_results.json")
     ap.add_argument("--resume", action="store_true",
                     help="skip combos already present in --out")
@@ -306,7 +319,8 @@ def main():
     if args.roles:
         dryrun_roles(multi_pod=args.multi_pod,
                      ratios=tuple(int(x) for x in
-                                  args.role_ratios.split(",")))
+                                  args.role_ratios.split(",")),
+                     n_collectors=args.n_collectors)
         return
 
     archs = registry.ARCH_IDS if (args.all or not args.arch) \

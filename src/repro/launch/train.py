@@ -56,11 +56,18 @@ def run_mbrl(args):
                       imagine_horizon=args.imagine_horizon,
                       n_models=args.n_models)
     algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    collect_noise = (tuple(float(x) for x in args.collect_noise.split(","))
+                     if args.collect_noise else None)
     rc = RunConfig(total_trajs=args.trajs, seed=args.seed,
                    collect_speed=args.collect_speed,
                    ema_weight=args.ema_weight,
                    early_stop=not args.no_early_stop,
-                   ckpt_dir=args.ckpt_dir)
+                   ckpt_dir=args.ckpt_dir,
+                   n_collectors=args.n_collectors,
+                   collect_noise=collect_noise)
+    if args.n_collectors > 1 and args.engine != "async":
+        raise SystemExit("--n-collectors > 1 needs --engine async "
+                         "(collector fleets belong to the async engine)")
     if args.mode == "procs" and args.engine != "async":
         raise SystemExit("--mode procs is only meaningful with "
                          "--engine async")
@@ -81,6 +88,20 @@ def run_mbrl(args):
            "real_seconds": round(time.time() - t0, 1), "trace": trace}
     if getattr(tr, "roles", None) is not None:
         out["roles"] = tr.roles.describe()
+    if getattr(tr, "collectors", None) is not None:
+        # fleet report: each member's exploration rung and — for the
+        # in-process engines — its share of the global criterion (the
+        # procs fleet lives in child processes; its counts are global
+        # only, reported in the "procs" block below)
+        n = tr.run_cfg.n_collectors
+        out["fleet"] = {
+            "n_collectors": n,
+            "noise_scales": [tr.exploration.scale_for(i)
+                             for i in range(n)],
+        }
+        if args.mode != "procs":
+            out["fleet"]["trajs_per_collector"] = \
+                [c.collected for c in tr.collectors]
     if getattr(tr, "proc_info", None):
         out["procs"] = tr.proc_info
     print(json.dumps(out["trace"][-1], indent=1))
@@ -150,6 +171,14 @@ def main():
     ap.add_argument("--imagine-batch", type=int, default=64)
     ap.add_argument("--imagine-horizon", type=int, default=40)
     ap.add_argument("--collect-speed", type=float, default=1.0)
+    ap.add_argument("--n-collectors", type=int, default=1,
+                    help="size of the data-collection fleet (async "
+                         "engine, all modes): N parallel collectors "
+                         "share the one global --trajs criterion")
+    ap.add_argument("--collect-noise", default=None,
+                    help="comma-separated per-collector exploration "
+                         "noise scales, cycled across the fleet "
+                         "(default: 1.0 everywhere)")
     ap.add_argument("--ema-weight", type=float, default=0.9)
     ap.add_argument("--no-early-stop", action="store_true")
     ap.add_argument("--mesh", default="none",

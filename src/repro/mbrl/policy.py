@@ -45,6 +45,16 @@ def sample_action(params, obs, key):
     return jnp.tanh(mu + std * jax.random.normal(key, mu.shape))
 
 
+def sample_action_scaled(params, obs, key, noise_scale):
+    """Exploration-scaled sampling for heterogeneous collector fleets:
+    the policy's Gaussian std is multiplied by ``noise_scale`` before
+    the draw (scale 1.0 reproduces :func:`sample_action` exactly — the
+    same key draws the same noise)."""
+    mu = mean_action(params, obs)
+    std = jnp.exp(params["log_std"]) * noise_scale
+    return jnp.tanh(mu + std * jax.random.normal(key, mu.shape))
+
+
 def deterministic_action(params, obs, key=None):
     return jnp.tanh(mean_action(params, obs))
 

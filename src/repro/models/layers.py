@@ -15,12 +15,11 @@ pytrees (used eagerly only for small configs; the dry-run calls them under
 from __future__ import annotations
 
 import functools
-
-from jax import ad_checkpoint
 from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
+from jax import ad_checkpoint
 from jax.sharding import PartitionSpec as P
 
 from repro.kernels.flash_attention import ops as attn_ops

@@ -143,6 +143,43 @@ def test_workers_shard_along_the_split_axis():
     assert algo._batch_sharding.spec == P("data")
 
 
+def test_collector_fleet_splits_sub_mesh_across_members():
+    """ISSUE 5: a fleet no longer pins every collector to device 0 of
+    the collector sub-mesh — members spread round-robin across its
+    devices, and each member's rollout runs where its policy cache
+    lives."""
+    from repro.core.roles import collector_sharding
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    env = make_env("pendulum")
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=8, n_models=2)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=8)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=5,
+                      n_models=2)
+    algo = make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+    # (2,1,1) of 8 devices -> 4-device collector sub-mesh; 6 collectors
+    # wrap round-robin: devices 0,1,2,3,0,1
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=6, seed=0),
+                      mesh=mesh, role_ratios=(2, 1, 1), n_collectors=6)
+    sub = tr.roles.collector
+    assert sub.devices.size == 4
+    sub_ids = [d.id for d in sub.devices.flat]
+    placed = [next(iter(c._sharding.device_set)).id
+              for c in tr.collectors]
+    assert placed == sub_ids + sub_ids[:2], placed
+    assert len(set(placed[:4])) == 4, \
+        "first 4 fleet members must occupy 4 DISTINCT devices"
+    # helper agrees with the workers' placement
+    assert [next(iter(collector_sharding(sub, i).device_set)).id
+            for i in range(6)] == placed
+    # fleet members actually collect on their devices; criterion exact
+    for c in tr.collectors:
+        c.step()
+        leaf = jax.tree.leaves(c._policy_cache)[0]
+        assert {d.id for d in leaf.sharding.device_set} == \
+            {next(iter(c._sharding.device_set)).id}
+    assert tr.data_server.total_pushed == 6
+
+
 # ------------------------------------------- (a) numerical equivalence
 def _train_n_epochs(sharding, batch_sharding, n_epochs=4):
     cfg = EnsembleConfig(obs_dim=3, act_dim=1, hidden=16, n_models=2,

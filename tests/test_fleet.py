@@ -1,0 +1,270 @@
+"""Collector fleets (ISSUE 5): N parallel data collectors in every
+engine mode, sharing ONE global stopping criterion.
+
+What is proven here:
+
+* the event engine runs a deterministic fleet — per-collector
+  virtual-time cursors, bit-identical traces per seed at N > 1;
+* the global ``total_trajs`` criterion lands EXACTLY (ticket-claimed)
+  in event and threads modes (procs: tests/test_procs.py);
+* collector 0's RNG stream is the lone collector's stream, so N=1
+  stays bit-identical to the pre-fleet engine and a fleet's first
+  member reproduces the single-collector data;
+* the paper's Fig. 4 story: at N > 1 the criterion is reached in fewer
+  policy steps (parallel collection shrinks the collection span);
+* per-collector exploration schedules (heterogeneous action-noise
+  scales) change the collected actions without touching collector 0;
+* the multi-producer drain path: ``ReplayBuffer.add_trajs`` writes a
+  burst bit-identically to sequential ``add_traj`` calls, in one
+  compiled scatter per chunk, compiling once across burst sizes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AsyncTrainer, DataServer, ReplayBuffer, RunConfig
+from repro.core.servers import _ring_write_burst_impl
+from repro.core.workers import ExplorationSchedule, collector_key
+from repro.envs import make_env
+from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
+from repro.utils.jit_stats import trace_counted
+
+
+def build(env, n_models=2):
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=32,
+                         n_models=n_models)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=16)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=15,
+                      n_models=n_models)
+    return ens, make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+
+
+def _traj(i, h=8, d=3, a=1):
+    k = jax.random.fold_in(jax.random.key(11), i)
+    return {"obs": jax.random.normal(k, (h, d)),
+            "act": jax.random.normal(jax.random.fold_in(k, 1), (h, a))}
+
+
+# ------------------------------------------------------------ event engine
+def test_event_fleet_deterministic_and_criterion_exact():
+    """Two same-seed N=4 event runs are bit-identical; the fleet stops
+    with EXACTLY total_trajs trajectories, split across members."""
+    env = make_env("pendulum")
+    traces = []
+    for _ in range(2):
+        ens, algo = build(env)
+        tr = AsyncTrainer(env, ens, algo,
+                          RunConfig(total_trajs=8, seed=0), n_collectors=4)
+        traces.append(tr.run())
+        assert tr.data_server.total_pushed == 8
+        assert sum(c.collected for c in tr.collectors) == 8
+        assert all(c.collected >= 1 for c in tr.collectors), \
+            "every fleet member must contribute (round-robin cursors)"
+    assert traces[0] == traces[1], "event fleet non-deterministic"
+
+
+def test_event_fleet_fewer_policy_steps_to_criterion():
+    """Fig. 4: parallel collection reaches the global criterion in less
+    virtual time, hence fewer policy steps spent to get there."""
+    steps, vtime = {}, {}
+    env = make_env("pendulum")
+    for n in (1, 4):
+        ens, algo = build(env)
+        tr = AsyncTrainer(env, ens, algo,
+                          RunConfig(total_trajs=8, seed=0), n_collectors=n)
+        trace = tr.run()
+        steps[n] = tr.policy_worker.steps
+        vtime[n] = trace[-1]["time"]
+    assert steps[4] < steps[1], steps
+    assert vtime[4] < vtime[1], vtime
+
+
+def test_collector_zero_stream_matches_lone_collector():
+    """Collector 0 of a fleet draws the SAME trajectories as the single
+    collector of an N=1 trainer (bit-identical) — the fleet refactor
+    must not perturb the pre-fleet RNG stream."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr1 = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=5))
+    ens, algo = build(env)
+    tr4 = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=5),
+                       n_collectors=4)
+    tr1.collector.step()
+    tr4.collectors[0].step()
+    (t1,), (t4,) = tr1.data_server.drain(), tr4.data_server.drain()
+    for k in t1:
+        np.testing.assert_array_equal(np.asarray(t1[k]), np.asarray(t4[k]))
+    # other members draw DIFFERENT streams
+    tr4.collectors[1].step()
+    (t_b,) = tr4.data_server.drain()
+    assert not np.array_equal(np.asarray(t1["obs"]), np.asarray(t_b["obs"]))
+
+
+def test_collector_key_derivation():
+    k = jax.random.key(3)
+    assert collector_key(k, 0) is k, "collector 0 must keep the base key"
+    k1, k2 = collector_key(k, 1), collector_key(k, 2)
+    assert not jnp.array_equal(jax.random.key_data(k1),
+                               jax.random.key_data(k2))
+
+
+def test_n_collectors_validation():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    with pytest.raises(ValueError, match="n_collectors"):
+        AsyncTrainer(env, ens, algo, RunConfig(), n_collectors=0)
+
+
+# ----------------------------------------------------------- threads engine
+def test_threads_fleet_criterion_exact():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=6, seed=0),
+                      mode="threads", n_collectors=3)
+    trace = tr.run()
+    assert tr.data_server.total_pushed == 6, \
+        "ticket-claimed criterion must land exactly, never overshoot"
+    assert sum(c.collected for c in tr.collectors) == 6
+    assert trace and trace[-1]["trajs"] == 6
+
+
+def test_same_scale_fleet_shares_one_rollout_jit():
+    """N same-scale members on one device must share ONE compiled
+    rollout (value-keyed cache), not pay N identical trace+compiles."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=0),
+                      n_collectors=3)
+    assert tr.collectors[0]._rollout is tr.collectors[1]._rollout \
+        is tr.collectors[2]._rollout
+    ens, algo = build(env)
+    tr2 = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=4, seed=0),
+                       n_collectors=2,
+                       exploration=ExplorationSchedule((1.0, 2.0)))
+    assert tr2.collectors[0]._rollout is not tr2.collectors[1]._rollout, \
+        "different noise scales need different samplers"
+
+
+def test_threads_collector_failure_is_loud():
+    """A collector thread dying mid-run must FAIL the run (its claimed
+    ticket can never be pushed), not return a short trace silently."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=6, seed=0),
+                      mode="threads", n_collectors=2)
+
+    def boom(p, k):
+        raise RuntimeError("rollout exploded")
+    # sabotage the WHOLE fleet: scheduling decides which member claims
+    # first, so any single-member sabotage could be starved of tickets
+    # by its healthy peer and never step at all
+    for c in tr.collectors:
+        c._rollout = boom
+    with pytest.raises(RuntimeError, match=r"collector \d+ failed"):
+        tr.run()
+
+
+# ------------------------------------------------------------- exploration
+def test_exploration_schedule_cycles_and_ladder():
+    s = ExplorationSchedule((1.0, 0.8, 1.3))
+    assert [s.scale_for(i) for i in range(5)] == [1.0, 0.8, 1.3, 1.0, 0.8]
+    lad = ExplorationSchedule.ladder(4, lo=0.5, hi=1.5)
+    assert lad.scale_for(0) == 1.0, "collector 0 keeps the plain policy"
+    assert lad.noise_scales == (1.0, 0.5, 1.0, 1.5), \
+        "varied rungs must span lo..hi evenly"
+    assert ExplorationSchedule.ladder(1).noise_scales == (1.0,)
+    assert ExplorationSchedule.ladder(2, lo=0.5, hi=1.5).noise_scales == \
+        (1.0, 1.5), "a lone varied rung takes the hi endpoint"
+
+
+def test_exploration_noise_scale_changes_actions_only_off_rung_zero():
+    """A noise-scaled collector draws different actions from the same
+    policy/key; scale 1.0 is exactly the plain sampler."""
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    rc = RunConfig(total_trajs=4, seed=2)
+    tr_plain = AsyncTrainer(env, ens, algo, rc)
+    ens, algo = build(env)
+    tr_noisy = AsyncTrainer(env, ens, algo, rc, n_collectors=2,
+                            exploration=ExplorationSchedule((1.0, 2.0)))
+    tr_plain.collector.step()
+    tr_noisy.collectors[0].step()        # rung 0: scale 1.0
+    tr_noisy.collectors[1].step()        # rung 1: scale 2.0
+    (p,) = tr_plain.data_server.drain()
+    a, b = tr_noisy.data_server.drain()
+    np.testing.assert_array_equal(np.asarray(p["act"]), np.asarray(a["act"]))
+    assert not np.array_equal(np.asarray(p["act"]), np.asarray(b["act"]))
+
+
+def test_run_config_collect_noise_builds_schedule():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo,
+                      RunConfig(total_trajs=4, collect_noise=(1.0, 0.5)),
+                      n_collectors=4)
+    assert [c.noise_scale for c in tr.collectors] == [1.0, 0.5, 1.0, 0.5]
+
+
+# ------------------------------------------------- ticket-based criterion
+def test_data_server_tickets_exact_with_preexisting_pushes():
+    """set_target counts trajectories already pushed (warm-up steps), so
+    claims top the total up to the target exactly."""
+    ds = DataServer()
+    for i in range(3):
+        ds.push({"x": i})
+    ds.set_target(5)
+    grants = sum(ds.try_claim() for _ in range(10))
+    assert grants == 2, "only target - already_pushed claims may be granted"
+    assert ds.try_claim() is False
+
+
+# ------------------------------------------------------- burst ring writes
+def test_add_trajs_bit_identical_to_sequential_adds():
+    """The fleet drain path (one padded scatter per chunk) must produce
+    byte-for-byte the ring a sequential writer produces — including the
+    train/val interleave, wrap-around and cursor positions."""
+    seq = ReplayBuffer(40, holdout_frac=0.2)
+    burst = ReplayBuffer(40, holdout_frac=0.2)
+    trajs = [_traj(i) for i in range(13)]    # wraps the 40-row train ring
+    for t in trajs:
+        seq.add_traj(t)
+    burst.add_trajs(trajs)
+    for view in ("train_view", "val_view"):
+        (a, na), (b, nb) = getattr(seq, view)(), getattr(burst, view)()
+        assert na == nb
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+    assert seq._cursor == burst._cursor
+    assert seq._val_cursor == burst._val_cursor
+    assert seq.total_seen == burst.total_seen
+
+
+def test_burst_write_compiles_once_across_burst_sizes():
+    """One compiled scatter covers every burst size up to the fixed
+    burst_capacity (padding rows are dropped by index) — a fleet's
+    variable-size drains never retrace the ring write."""
+    rb = ReplayBuffer(64, holdout_frac=0.0, burst_capacity=4)
+    counted = trace_counted(_ring_write_burst_impl, donate_argnums=(0,))
+    rb._write_burst = counted
+    rb.add_trajs([_traj(i) for i in range(2)])      # M=2
+    rb.add_trajs([_traj(10 + i) for i in range(4)])  # M=4 (full burst)
+    rb.add_trajs([_traj(20 + i) for i in range(3)])  # M=3
+    assert counted.trace_count == 1, \
+        f"burst ring write retraced {counted.trace_count - 1}x"
+    assert rb.size == min(9 * 8, 64)
+
+
+def test_burst_chunking_respects_capacity():
+    """A burst larger than the ring keeps FIFO semantics: the last
+    ``capacity`` transitions win, same as sequential writes."""
+    seq = ReplayBuffer(24, holdout_frac=0.0)
+    burst = ReplayBuffer(24, holdout_frac=0.0, burst_capacity=16)
+    trajs = [_traj(100 + i) for i in range(9)]       # 72 rows into 24
+    for t in trajs:
+        seq.add_traj(t)
+    burst.add_trajs(trajs)
+    np.testing.assert_array_equal(
+        np.asarray(seq.train_view()[0]["obs"]),
+        np.asarray(burst.train_view()[0]["obs"]))

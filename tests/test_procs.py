@@ -169,6 +169,119 @@ def test_proc_data_server_push_drain():
     assert ds.total_pushed == 3          # drain moves, doesn't recount
 
 
+def test_proc_data_server_backpressure_error():
+    """A full queue must surface a DESCRIPTIVE error (queue size, the
+    slowest consumer, the knob to turn) after the configured timeout —
+    not a bare queue.Full after a hard-coded 30 s."""
+    import multiprocessing as mp
+
+    from repro.core.servers import BackpressureError
+    ds = ProcDataServer(mp.get_context("spawn"), maxsize=2,
+                        push_timeout=0.2)
+    traj = {"obs": np.zeros((4, 2), np.float32)}
+    ds.push(traj)
+    ds.push(traj)
+    t0 = time.monotonic()
+    with pytest.raises(BackpressureError) as ei:
+        ds.push(traj, collector_id=1)
+    assert time.monotonic() - t0 < 5.0, "constructor timeout not honored"
+    msg = str(ei.value)
+    assert "2 (maxsize)" in msg and "model worker" in msg \
+        and "push_timeout_s" in msg, msg
+    # per-call override still works
+    with pytest.raises(BackpressureError):
+        ds.push(traj, timeout=0.05)
+    assert ds.total_pushed == 2, "a failed push must not count"
+
+
+def test_proc_data_server_tickets_and_refund():
+    """Ticket accounting behind the exact fleet criterion: claims stop
+    at the target, an in-flight crash is refundable exactly once."""
+    import multiprocessing as mp
+    ds = ProcDataServer(mp.get_context("spawn"), n_collectors=2, target=3)
+    assert ds.try_claim(0) and ds.try_claim(1) and ds.try_claim(0)
+    assert not ds.try_claim(1), "claims must stop at the target"
+    # collector 0 'crashed' between claim and push: refund reopens a slot
+    assert ds.refund_inflight(0) is True
+    assert ds.refund_inflight(0) is False, "double refund must be a no-op"
+    assert ds.try_claim(1)
+    ds.push({"x": np.zeros(1, np.float32)}, collector_id=1)
+    assert ds.refund_inflight(1) is False, \
+        "a completed push clears the in-flight flag"
+
+
+def _fleet_producer(ds, cid, n_items, start_evt, hang_evt=None):
+    """Module-level so the spawn context can pickle it (tests dir rides
+    sys.path into the child)."""
+    start_evt.wait(30)
+    pushed = 0
+    while ds.try_claim(cid):
+        if hang_evt is not None and pushed == n_items:
+            hang_evt.set()
+            time.sleep(300)      # SIGKILLed here, holding a ticket
+        ds.push({"x": np.full((3,), cid, np.float32)}, collector_id=cid)
+        pushed += 1
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_proc_data_server_multi_producer_exact_under_kill():
+    """ISSUE 5 satellite: the shared total stays exact with >= 3
+    concurrent producer PROCESSES, and across a SIGKILL + restart of
+    one producer (the parent refunds its in-flight ticket, a
+    replacement resumes the GLOBAL count)."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    target = 24
+    ds = ProcDataServer(ctx, n_collectors=3, target=target)
+    start = ctx.Event()
+    hang = ctx.Event()
+    # producer 2 pushes 2 items, then hangs while HOLDING a ticket
+    # (daemon=True everywhere: a failing assertion must never wedge the
+    # pytest process at exit joining a stuck child)
+    victim = ctx.Process(target=_fleet_producer, args=(ds, 2, 2, start,
+                                                       hang), daemon=True)
+    victim.start()
+    start.set()
+    assert hang.wait(60), "victim never reached its hang point"
+    # drain the victim's two items BEFORE killing it: once the parent
+    # has received them, the victim's queue feeder thread is provably
+    # idle, so SIGKILL cannot land mid-pipe-write holding the queue's
+    # shared writer lock (which would wedge every other producer — the
+    # documented transactional-queue limitation, not what this test
+    # is about)
+    drained = []
+    deadline = time.monotonic() + 30
+    while len(drained) < 2 and time.monotonic() < deadline:
+        drained.extend(ds.drain())
+        time.sleep(0.01)
+    assert len(drained) == 2, "victim's pushes never arrived"
+    os.kill(victim.pid, signal.SIGKILL)
+    victim.join(30)
+    assert victim.exitcode != 0
+    assert ds.total_pushed == 2
+    assert ds.refund_inflight(2) is True, \
+        "killed-mid-claim producer must leave a refundable ticket"
+    # 3 fresh concurrent producers (incl. the victim's replacement)
+    # race for the remaining tickets
+    procs = [ctx.Process(target=_fleet_producer,
+                         args=(ds, cid, 0, start), daemon=True)
+             for cid in range(3)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(120)
+        assert p.exitcode == 0, "producer crashed"
+    deadline = time.monotonic() + 30
+    while len(drained) < target and time.monotonic() < deadline:
+        drained.extend(ds.drain())
+        time.sleep(0.01)
+    assert ds.total_pushed == target, \
+        f"global count not exact: {ds.total_pushed} != {target}"
+    assert len(drained) == target, len(drained)
+    assert not ds.try_claim(0), "tickets must stay exhausted"
+
+
 def test_procs_mode_requires_plain_configs():
     env = make_env("pendulum")
     ens, pol, acfg = small_cfgs(env)
@@ -201,7 +314,7 @@ def test_procs_and_threads_runs_same_seed_both_train(tmp_path):
     assert tr.proc_info["model_version"] >= 1, "model never trained"
     assert tr.proc_info["policy_version"] > 1, \
         "policy version never moved past the warmup init push"
-    assert tr.proc_info["restarts"] == {"collector": 0, "model": 0,
+    assert tr.proc_info["restarts"] == {"collector:0": 0, "model": 0,
                                         "policy": 0}
     assert all_finite(tr.policy_worker.state["policy"])
     assert all_finite(tr.model_worker.params)
@@ -218,6 +331,35 @@ def test_procs_and_threads_runs_same_seed_both_train(tmp_path):
     assert trace_t and trace_t[-1]["trajs"] >= rc_t.total_trajs
     assert tr_t.policy_server.version >= 1
     assert all_finite(tr_t.policy_worker.state["policy"])
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_procs_fleet_of_four_completes_criterion_exact(tmp_path):
+    """ISSUE 5 acceptance: AsyncTrainer(n_collectors=4) in procs mode —
+    four collector processes plus model/policy — completes with the
+    global trajectory criterion landing EXACTLY, per-collector restart
+    accounting in place, and a heterogeneous exploration ladder."""
+    env = make_env("pendulum")
+    ens, pol, acfg = small_cfgs(env)
+    rc = RunConfig(total_trajs=8, seed=SEED, min_warmup_trajs=2,
+                   eval_every_policy_steps=2, snapshot_every_s=2.0,
+                   ckpt_dir=str(tmp_path / "ckpt"),
+                   collect_noise=(1.0, 0.75, 1.25, 1.5),
+                   min_final_model_version=1, min_final_policy_version=2)
+    tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                      algo_cfg=acfg, pol_cfg=pol, n_collectors=4)
+    trace = tr.run()
+    assert tr.proc_info["trajs"] == rc.total_trajs, \
+        f"fleet criterion not exact: {tr.proc_info['trajs']}"
+    assert tr.proc_info["n_collectors"] == 4
+    assert tr.proc_info["noise_scales"] == [1.0, 0.75, 1.25, 1.5]
+    assert set(tr.proc_info["restarts"]) == \
+        {"model", "policy", "collector:0", "collector:1", "collector:2",
+         "collector:3"}
+    assert tr.proc_info["model_version"] >= 1
+    assert all_finite(tr.policy_worker.state["policy"])
+    assert trace and trace[-1]["trajs"] == rc.total_trajs
 
 
 @pytest.mark.slow

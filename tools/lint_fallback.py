@@ -1,9 +1,12 @@
 """Stdlib-only fallback for `make lint` on hosts without ruff.
 
-Approximates the enforced rule set (pyflakes F + E9, see pyproject.toml
-[tool.ruff]): syntax errors, unused imports (F401), and duplicate
-function/class definitions in one scope (F811-lite). It intentionally
-under-reports relative to ruff — CI installs the real linter from
+Approximates the enforced rule set (pyflakes F + E9 + import sorting I,
+see pyproject.toml [tool.ruff]): syntax errors, unused imports (F401),
+duplicate function/class definitions in one scope (F811-lite), and
+unsorted import blocks (I001-lite: future < stdlib < third-party <
+first-party sections, straight imports before from-imports, modules
+alphabetical case-insensitively). It intentionally under-reports
+relative to ruff — CI installs the real linter from
 requirements-dev.txt; this keeps local `make lint` from silently
 becoming a no-op.
 
@@ -16,6 +19,58 @@ import sys
 from pathlib import Path
 
 SKIP_DIRS = {"__pycache__", "results", ".git"}
+
+# mirrors [tool.ruff] src: repo-local packages/modules sort last
+FIRST_PARTY = {"repro", "benchmarks", "tools", "tests",
+               "_hypothesis_compat", "_mesh_impl", "conftest"}
+_STDLIB = getattr(sys, "stdlib_module_names", frozenset())
+
+
+def _import_sort_key(node):
+    """(section, style, module-lower): the order ruff's default isort
+    profile enforces within one contiguous import block."""
+    if isinstance(node, ast.Import):
+        module, style = node.names[0].name, 0
+    else:
+        module = "." * node.level + (node.module or "")
+        style = 1
+    root = module.lstrip(".").split(".")[0]
+    if module.startswith("__future__"):
+        section = 0
+    elif module.startswith("."):
+        section = 4         # relative (local-folder) imports sort LAST
+    elif root in _STDLIB:
+        section = 1
+    elif root in FIRST_PARTY:
+        section = 3
+    else:
+        section = 2
+    return (section, style, module.lower())
+
+
+def _check_import_order(path, tree):
+    """I001-lite: every contiguous run of import statements (any scope)
+    must already be in sorted order."""
+    problems = []
+    for scope in ast.walk(tree):
+        body = getattr(scope, "body", None)
+        if not isinstance(body, list) or isinstance(scope, ast.Try):
+            continue        # try/except import fallbacks are deliberate
+        run = []
+        for node in list(body) + [None]:
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                run.append(node)
+                continue
+            if len(run) > 1:
+                keys = [_import_sort_key(n) for n in run]
+                if keys != sorted(keys):
+                    bad = next(i for i in range(len(keys) - 1)
+                               if keys[i] > keys[i + 1])
+                    problems.append(
+                        f"{path}:{run[bad + 1].lineno}: I001 import block "
+                        "un-sorted (section/style/alpha order)")
+            run = []
+    return problems
 
 
 def _imported_names(node):
@@ -34,7 +89,7 @@ def check_file(path: Path):
     except SyntaxError as e:
         return [f"{path}:{e.lineno}: E999 syntax error: {e.msg}"]
 
-    problems = []
+    problems = _check_import_order(path, tree)
     # F401: names bound by module-level imports and never read anywhere.
     # Conservative: any attribute/name/string occurrence counts as use
     # (docstring-referenced re-exports are common in this repo).
