@@ -18,6 +18,9 @@ supposed to guarantee (and what the seed code violated):
   paced trajs/s at N=1,2,4 in threads and procs modes, and the
   event-mode Fig. 4 regeneration (fewer policy steps to the global
   criterion at N>1). Rates/counts only: never gated.
+* with ``--env-farm``: vectorized env-farm scaling (ISSUE 6) — paced
+  trajs/s at B=1,64,256 envs per collector (threads N=1,2 and procs),
+  plus the raw unpaced batch-rollout rate. Rates only: never gated.
 
 Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
 the repo root. With ``--check``, compares fresh numbers against the
@@ -374,6 +377,130 @@ def bench_collect_scaling(metrics, *, fleet_sizes=(1, 2, 4)):
     return metrics
 
 
+def bench_env_farm(metrics, *, batch_sizes=(1, 64, 256),
+                   fleet_sizes=(1, 2)):
+    """Env-farm scaling (ISSUE 6): each collector simulates B envs per
+    step through ONE vmapped rollout (``Env.rollout_batch``) and pushes
+    the whole batch at once.
+
+    * threads + procs modes, PACED at 50x robot speed — the same
+      methodology as the headline ``threads_trajs_per_s``: a paced
+      collector occupies one trajectory's robot time per step however
+      many robots it simulates, so a farm of B multiplies the robot-rate
+      ceiling by B as long as the batched compute fits inside the pacing
+      interval. This is the paper's collection-bound regime (run time ~=
+      data-collection time), where the farm is the order-of-magnitude
+      lever.
+    * ``env_farm_raw_b*``: the UNPACED compute-only rate of the batch
+      rollout itself (one collector, learners idle) — the honest
+      device-throughput gain from vmapping the scan, reported so the
+      paced numbers can't be mistaken for raw compute speedup.
+
+    All metrics are rates (no ``_us`` suffix): never gated, tracked PR
+    over PR via the committed baseline and the CI artifact."""
+    import threading
+
+    from repro.core import AsyncTrainer, RunConfig, clear_eval_cache
+    from repro.core.workers import clear_rollout_cache
+
+    steps_measured = 4          # post-warmup batch steps per collector
+
+    # -- threads mode, paced: B x N grid
+    for n in fleet_sizes:
+        for b in batch_sizes:
+            env, ens, algo, _, _cfgs = _build()
+            rc = RunConfig(total_trajs=10 ** 9, seed=0,
+                           collect_speed=50.0, pace_collection=True,
+                           n_collectors=n, envs_per_collector=b)
+            tr = AsyncTrainer(env, ens, algo, rc, mode="threads")
+            for w in tr.collectors:
+                w.step()            # compiles the B-lane farm program
+            while tr.data_server.total_pushed < rc.min_warmup_trajs:
+                tr.collectors[0].step(1)
+            # one full drain warms the burst ring-write at farm size
+            _require(tr.model_worker.step() is not None,
+                     "model warmup idled")
+            _require(tr.policy_worker.step(), "policy warmup had no model")
+            _block(tr.recorder._eval(tr.policy_worker.state["policy"],
+                                     jax.random.key(0)))
+            pre = tr.data_server.total_pushed
+            tr.run_cfg.total_trajs = pre + steps_measured * b * n
+            t0 = time.perf_counter()
+            tr.run()
+            wall = time.perf_counter() - t0
+            got = tr.data_server.total_pushed - pre
+            _require(got == steps_measured * b * n,
+                     f"env-farm threads criterion not exact ({got})")
+            metrics[f"env_farm_threads_n{n}_b{b}_trajs_per_s"] = \
+                round(got / wall, 2)
+    lo = f"env_farm_threads_n1_b{batch_sizes[0]}_trajs_per_s"
+    hi = f"env_farm_threads_n1_b{max(batch_sizes)}_trajs_per_s"
+    metrics[f"env_farm_threads_b{max(batch_sizes)}_speedup_x"] = \
+        round(metrics[hi] / metrics[lo], 1)
+
+    # -- raw compute: unpaced batch rollout, learners idle
+    for b in batch_sizes:
+        env, ens, algo, _, _cfgs = _build()
+        tr = AsyncTrainer(env, ens, algo,
+                          RunConfig(total_trajs=8, seed=0,
+                                    envs_per_collector=b))
+        w = tr.collectors[0]
+
+        def one_batch():
+            _require(w.step() is not None, "farm worker had no policy")
+            _block(tr.data_server.drain())
+        metrics[f"env_farm_raw_b{b}_trajs_per_s"] = round(
+            b * 1e6 / _timeit(one_batch, reps=10), 2)
+
+    # rollout programs for every (B) variant + eval programs pile up
+    # across the grid above: drop them between groups (the LRU bound
+    # also caps them, but the bench should not rely on eviction order)
+    clear_rollout_cache()
+    clear_eval_cache()
+
+    # -- procs mode, paced: one farm collector per batch size (children
+    # compile in-run; rate measured over the post-warmup window, first
+    # batch seen -> last push, same protocol as collect_scaling)
+    for b in batch_sizes:
+        env, ens, _algo, _, (pol, acfg) = _build()
+        rc = RunConfig(total_trajs=(steps_measured + 1) * b, seed=0,
+                       collect_speed=50.0, pace_collection=True,
+                       min_warmup_trajs=4, envs_per_collector=b,
+                       min_final_model_version=1,
+                       min_final_policy_version=1)
+        tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                          algo_cfg=acfg, pol_cfg=pol)
+        done = {}
+        th = threading.Thread(target=lambda: done.setdefault("t", tr.run()),
+                              daemon=True)
+        t_start = time.perf_counter()
+        th.start()
+        warm = None
+        last = None
+        seen = 0
+        while th.is_alive() and time.perf_counter() - t_start < 900:
+            srv = getattr(tr, "_proc_servers", None)
+            if srv:
+                total = srv["data"].total_pushed
+                if total > seen:
+                    seen = total
+                    last = time.perf_counter()
+                    if warm is None and total >= b:
+                        warm = (last, total)
+            time.sleep(0.005)
+        th.join(timeout=10)
+        _require(not th.is_alive(), "env-farm procs run wedged")
+        total = tr.proc_info["trajs"]
+        _require(total == rc.total_trajs,
+                 f"env-farm procs criterion not exact ({total})")
+        if warm is not None and last is not None and total > warm[1]:
+            rate = (total - warm[1]) / max(last - warm[0], 1e-9)
+        else:   # run finished between polls: whole-run fallback (incl.
+            rate = total / max(time.perf_counter() - t_start, 1e-9)  # compile)
+        metrics[f"env_farm_procs_b{b}_trajs_per_s"] = round(rate, 2)
+    return metrics
+
+
 def bench_sharded(metrics):
     """Role-sharded hot path, measured in a SUBPROCESS forced to 8 host
     devices (the parent keeps its single device, so the single-device
@@ -465,7 +592,8 @@ def _sharded_child() -> dict:
 
 
 def run_bench(*, sharded: bool = False,
-              collect_scaling: bool = False) -> dict:
+              collect_scaling: bool = False,
+              env_farm: bool = False) -> dict:
     metrics = {}
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
@@ -473,6 +601,8 @@ def run_bench(*, sharded: bool = False,
     bench_procs_throughput(metrics)
     if collect_scaling:
         bench_collect_scaling(metrics)
+    if env_farm:
+        bench_env_farm(metrics)
     if sharded:
         bench_sharded(metrics)
     return {
@@ -520,6 +650,12 @@ def main(argv=None) -> int:
                          "at N=1,2,4 in threads and procs modes plus the "
                          "event-mode policy-steps-to-criterion comparison "
                          "(collect_scaling_* metrics, never gated)")
+    ap.add_argument("--env-farm", action="store_true",
+                    help="also measure env-farm scaling: paced trajs/s "
+                         "at B=1,64,256 envs per collector in threads "
+                         "(N=1,2) and procs modes, plus the raw unpaced "
+                         "batch-rollout rate (env_farm_* metrics, never "
+                         "gated)")
     ap.add_argument("--sharded-child", action="store_true",
                     help=argparse.SUPPRESS)   # internal: see bench_sharded
     ap.add_argument("--out", default=str(BASELINE))
@@ -530,7 +666,8 @@ def main(argv=None) -> int:
         return 0
 
     fresh = run_bench(sharded=args.sharded,
-                      collect_scaling=args.collect_scaling)
+                      collect_scaling=args.collect_scaling,
+                      env_farm=args.env_farm)
     for k, v in fresh["metrics"].items():
         print(f"hotpath/{k},{v}")
 
@@ -564,12 +701,16 @@ def main(argv=None) -> int:
         # would silently ratchet the bar down for every later run.
         # Re-baseline deliberately by running without --check.
         return status
-    if out.exists() and not args.collect_scaling:
-        # re-baselining without --collect-scaling must not silently drop
-        # the committed fleet-scaling metrics: carry them over untouched
+    if out.exists():
+        # re-baselining without the optional sections must not silently
+        # drop their committed metrics: carry them over untouched
+        skipped = [p for p, ran in (("collect_scaling_",
+                                     args.collect_scaling),
+                                    ("env_farm_", args.env_farm))
+                   if not ran]
         old = json.loads(out.read_text()).get("metrics", {})
         for k, v in old.items():
-            if k.startswith("collect_scaling_") \
+            if any(k.startswith(p) for p in skipped) \
                     and k not in fresh["metrics"]:
                 fresh["metrics"][k] = v
     out.write_text(json.dumps(fresh, indent=1) + "\n")

@@ -9,4 +9,5 @@ from repro.core.servers import (BackpressureError, DataServer, LocalBuffer,
 from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
                                 ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,
-                                ProcSpec, proc_worker_main)
+                                ProcSpec, clear_rollout_cache,
+                                proc_worker_main)

@@ -77,6 +77,12 @@ class RunConfig:
     # scales (cycled across the fleet); None = every collector at 1.0.
     n_collectors: int = 1
     collect_noise: Optional[tuple] = None
+    # env farm (ISSUE 6): each collector simulates B envs per step via
+    # one vmapped rollout (Env.rollout_batch) and pushes the whole batch
+    # at once; tickets are claimed min(B, remaining) so the global
+    # criterion still lands exactly. 1 = the pre-farm engine, bit for
+    # bit (the single-rollout compiled program, one key split per step).
+    envs_per_collector: int = 1
     # threads mode: sleep out each trajectory's robot time (horizon * dt /
     # collect_speed) so wall-clock reproduces the paper's real-robot rate
     # instead of racing simulated rollouts at compute speed
@@ -164,6 +170,7 @@ class AsyncTrainer:
                  role_ratios=(1, 2, 1), role_axis: Optional[str] = None,
                  algo_cfg=None, pol_cfg=None,
                  n_collectors: Optional[int] = None,
+                 envs_per_collector: Optional[int] = None,
                  exploration: Optional[ExplorationSchedule] = None):
         """``mesh``/``roles``: run each worker against its own role
         sub-mesh (core/roles.py). Pass a ``roles`` RoleSplit directly, or
@@ -178,6 +185,11 @@ class AsyncTrainer:
         bit-for-bit the pre-fleet engine. ``exploration`` plugs in a
         per-collector :class:`~repro.core.workers.ExplorationSchedule`
         (default: built from ``run_cfg.collect_noise``, or uniform 1.0).
+
+        ``envs_per_collector``: the env farm (ISSUE 6) — each collector
+        runs B simulated robots per step through one vmapped rollout
+        (overrides ``run_cfg.envs_per_collector``; B=1 is the pre-farm
+        engine bit for bit).
 
         ``mode="procs"`` additionally requires ``algo_cfg``/``pol_cfg``
         (plain-config AlgoConfig/PolicyConfig): spawned children cannot
@@ -208,9 +220,15 @@ class AsyncTrainer:
         if n_collectors is not None:
             run_cfg = dataclasses.replace(run_cfg,
                                           n_collectors=int(n_collectors))
+        if envs_per_collector is not None:
+            run_cfg = dataclasses.replace(
+                run_cfg, envs_per_collector=int(envs_per_collector))
         if run_cfg.n_collectors < 1:
             raise ValueError(f"n_collectors must be >= 1, got "
                              f"{run_cfg.n_collectors}")
+        if run_cfg.envs_per_collector < 1:
+            raise ValueError(f"envs_per_collector must be >= 1, got "
+                             f"{run_cfg.envs_per_collector}")
         self.run_cfg = run_cfg
         self.exploration = exploration if exploration is not None else (
             ExplorationSchedule(tuple(run_cfg.collect_noise))
@@ -247,7 +265,8 @@ class AsyncTrainer:
                 speed=run_cfg.collect_speed,
                 mesh=roles.collector if roles else None,
                 collector_id=i,
-                noise_scale=self.exploration.scale_for(i))
+                noise_scale=self.exploration.scale_for(i),
+                envs_per_step=run_cfg.envs_per_collector)
             for i in range(n_local)]
         self.collector = self.collectors[0]     # back-compat alias
         self.model_worker = ModelLearningWorker(
@@ -256,7 +275,8 @@ class AsyncTrainer:
             min_trajs=run_cfg.min_warmup_trajs,
             mesh=roles.model if roles else None,
             batch_axis=roles.axis if roles else None,
-            burst=default_burst(run_cfg.n_collectors))
+            burst=default_burst(run_cfg.n_collectors,
+                                run_cfg.envs_per_collector))
         self.recorder = _Recorder(env, run_cfg.eval_rollouts)
 
     # ------------------------------------------------------------- event
@@ -282,11 +302,18 @@ class AsyncTrainer:
                                  for i in range(len(self.collectors))))
         ds = self.data_server
         since_eval = 0
+        B = rc.envs_per_collector
         while ds.total_pushed < rc.total_trajs:
             w = min(cur, key=cur.get)
             t = cur[w]
             if w.startswith("collect:"):
-                self.collectors[int(w.split(":", 1)[1])].step()
+                # env farm: B robots run in PARALLEL, so a batch step
+                # still advances this collector's cursor by ONE
+                # trajectory time. The single-threaded engine needs no
+                # tickets — claim min(B, remaining) directly so the
+                # criterion lands exactly when B doesn't divide it.
+                g = min(B, rc.total_trajs - ds.total_pushed)
+                self.collectors[int(w.split(":", 1)[1])].step(g)
                 cur[w] = t + traj_t
             elif w == "model":
                 out = self.model_worker.step()
@@ -326,13 +353,19 @@ class AsyncTrainer:
         collect_errors: List[tuple] = []
 
         def collect_loop(w):
-            while not stop.is_set() and ds.try_claim(w.collector_id):
+            while not stop.is_set():
+                # env farm: claim up to a whole batch of slots; the
+                # server grants min(B, remaining), so the last batch
+                # shrinks to land the criterion exactly
+                g = ds.try_claim(w.collector_id, k=w.envs_per_step)
+                if not g:
+                    break
                 t_step = time.monotonic()
                 try:
-                    dur = w.step()
+                    dur = w.step(g)
                 except Exception as e:
-                    # a dead thread cannot refund its claimed ticket, so
-                    # the run would otherwise 'complete' one trajectory
+                    # a dead thread cannot refund its claimed tickets, so
+                    # the run would otherwise 'complete' trajectories
                     # short with only a stderr traceback — record it and
                     # re-raise from the MAIN thread after the joins
                     collect_errors.append((w.collector_id, e))

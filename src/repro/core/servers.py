@@ -151,26 +151,49 @@ class DataServer:
     Explicitly MULTI-PRODUCER (collector fleets, ISSUE 5): any number of
     collectors push concurrently; one lock makes ``total_pushed`` exact
     under interleaved pushes. The global stopping criterion is enforced
-    with a ticket counter: ``set_target(n)`` arms it and ``try_claim()``
+    with a ticket counter: ``set_target(n)`` arms it and ``try_claim(k)``
     hands out at most ``n - total_pushed_at_arm_time`` collection slots,
     so a fleet finishes with ``total_pushed == n`` EXACTLY — never an
-    overshoot from two collectors racing past the threshold.
+    overshoot from two collectors racing past the threshold. Batch-aware
+    (env farms, ISSUE 6): ``try_claim(k=B)`` grants 0..B tickets under
+    the one lock — ``min(B, remaining)`` — so a farm's last batch shrinks
+    to land the criterion exactly; a denied claim sleeps
+    ``claim_backoff`` seconds before returning so collectors that lose
+    the race near the criterion don't spin-poll at full speed.
 
     Zero-copy: pushed trajectories are stored by reference (jax arrays
     are immutable, so handing them across threads is safe) — no
-    device->host materialisation on the hot path."""
+    device->host materialisation on the hot path; a pushed BATCH is
+    unstacked into per-lane slices (lazy jax views, no copies)."""
 
-    def __init__(self):
+    def __init__(self, *, claim_backoff: float = 0.002):
+        self.claim_backoff = float(claim_backoff)
         self._lock = threading.Lock()
         self._items: List[Any] = []
         self._total = 0
         self._target: Optional[int] = None
         self._tickets = 0
+        self._inflight: Dict[int, int] = {}
 
     def push(self, traj, *, collector_id: int = 0) -> int:
         with self._lock:
             self._items.append(traj)
             self._total += 1
+            self._dec_inflight(collector_id, 1)
+            return self._total
+
+    def push_batch(self, batch, n: int, *, collector_id: int = 0) -> int:
+        """Push ``n`` trajectories stacked as one batch (dict of
+        (n, H, ...) arrays — a farm step's output). Consumers always see
+        per-trajectory dicts: the batch is unstacked into lane slices
+        OUTSIDE the lock, then appended and counted atomically, so
+        ``total_pushed`` moves by n in one step and interleaved
+        producers stay exact."""
+        lanes = [{k: v[i] for k, v in batch.items()} for i in range(n)]
+        with self._lock:
+            self._items.extend(lanes)
+            self._total += n
+            self._dec_inflight(collector_id, n)
             return self._total
 
     def set_target(self, total: int) -> None:
@@ -180,14 +203,44 @@ class DataServer:
             self._target = int(total)
             self._tickets = self._total
 
-    def try_claim(self, collector_id: int = 0) -> bool:
-        """Reserve one collection slot. Returns False once every slot up
-        to the armed target is claimed (the collector should stop)."""
+    def try_claim(self, collector_id: int = 0, k: int = 1) -> int:
+        """Reserve up to ``k`` collection slots toward the armed target;
+        marks them in-flight for ``collector_id`` until the matching
+        push lands. Returns the number granted — ``min(k, remaining)``,
+        possibly 0 once the target is fully claimed (the collector
+        should stop). No target configured: always grants ``k``. The
+        denied path sleeps ``claim_backoff`` (outside the lock) so
+        losers of the final-claim race back off instead of spinning."""
+        k = int(k)
         with self._lock:
-            if self._target is not None and self._tickets >= self._target:
-                return False
-            self._tickets += 1
-            return True
+            g = k if self._target is None else \
+                min(k, max(self._target - self._tickets, 0))
+            if g > 0:
+                self._tickets += g
+                self._inflight[collector_id] = \
+                    self._inflight.get(collector_id, 0) + g
+                return g
+        time.sleep(self.claim_backoff)
+        return 0
+
+    def refund_inflight(self, collector_id: int) -> int:
+        """Return every ticket ``collector_id`` claimed but never
+        pushed (its collector died mid-batch). Returns the number
+        refunded. Mirror of :meth:`ProcDataServer.refund_inflight` for
+        supervisors of in-process fleets."""
+        with self._lock:
+            g = self._inflight.pop(collector_id, 0)
+            self._tickets -= g
+            return g
+
+    def _dec_inflight(self, collector_id: int, n: int) -> None:
+        # already holding self._lock. Claims are optional (the event
+        # engine pushes without claiming), so clamp at zero.
+        left = self._inflight.get(collector_id, 0) - n
+        if left > 0:
+            self._inflight[collector_id] = left
+        else:
+            self._inflight.pop(collector_id, None)
 
     def drain(self) -> List[Any]:
         """Move ALL pending trajectories to the caller (empties server)."""
@@ -419,17 +472,22 @@ class ProcDataServer:
     global trajectory count stays exact under concurrent pushes from any
     number of collector processes AND across collector crash/restarts (a
     restarted collector resumes the global count instead of re-collecting
-    from zero). ``try_claim(i)`` reserves a collection slot and marks
-    collector ``i`` in-flight; ``push`` clears the mark. A collector
-    killed between claim and push leaves its in-flight flag set — the
-    supervising parent calls ``refund_inflight(i)`` when it respawns the
-    worker, so a crash can never strand a ticket (stall) or push the
-    COUNTER past the target (overshoot). One documented residual window:
-    a kill between the queue enqueue and the counter increment leaves a
-    refundable ticket whose trajectory already landed in the queue, so
-    the replacement's push puts one EXTRA trajectory in the training
-    stream — ``total_pushed`` (the stopping criterion) stays exact, the
-    model just trains on target+1 trajectories. Closing it would need a
+    from zero). ``try_claim(i, k)`` reserves up to ``k`` collection slots
+    — ``min(k, remaining)``, batch-aware for env farms (ISSUE 6) — and
+    adds them to collector ``i``'s in-flight COUNT; ``push`` /
+    ``push_batch`` subtract what they deliver. A collector killed
+    mid-batch leaves its undelivered tickets in flight — the supervising
+    parent calls ``refund_inflight(i)`` when it respawns the worker and
+    gets back exactly the stranded count, so a crash can never strand a
+    ticket (stall) or push the COUNTER past the target (overshoot). A
+    denied claim sleeps ``claim_backoff`` seconds before returning, so
+    collectors that lose the race near the criterion back off instead of
+    spin-polling. One documented residual window: a kill between the
+    queue enqueue and the counter increment leaves refundable tickets
+    whose trajectories already landed in the queue, so the replacement's
+    pushes put EXTRA trajectories in the training stream —
+    ``total_pushed`` (the stopping criterion) stays exact, the model
+    just trains on a few extra trajectories. Closing it would need a
     transactional queue; the window is microseconds inside ``push``. A
     second residual window, inherited from the PR 4 counter: the ticket
     lock (and the mp.Queue's internal writer lock) is a plain
@@ -448,19 +506,32 @@ class ProcDataServer:
     ``RunConfig.push_timeout_s``."""
 
     def __init__(self, ctx, *, n_collectors: int = 1, maxsize: int = 512,
-                 push_timeout: float = 30.0, target: Optional[int] = None):
+                 push_timeout: float = 30.0, target: Optional[int] = None,
+                 claim_backoff: float = 0.002):
         self.n_collectors = max(int(n_collectors), 1)
         self.maxsize = int(maxsize)
         self.push_timeout = float(push_timeout)
+        self.claim_backoff = float(claim_backoff)
         self._target = None if target is None else int(target)
         self._q = ctx.Queue(maxsize)
-        # one lock guards ALL counters: total / tickets / in-flight flags
-        # must move together for the criterion to be exact under
+        # one lock guards ALL counters: total / tickets / in-flight
+        # counts must move together for the criterion to be exact under
         # concurrent producers and supervisor refunds
         self._lock = ctx.Lock()
         self._total = ctx.Value("q", 0, lock=False)
         self._tickets = ctx.Value("q", 0, lock=False)
-        self._inflight = ctx.Array("b", self.n_collectors, lock=False)
+        self._inflight = ctx.Array("q", self.n_collectors, lock=False)
+
+    def _raise_backpressure(self, collector_id, timeout):
+        raise BackpressureError(
+            f"trajectory queue full: collector {collector_id} waited "
+            f"{timeout:.1f}s to push and the queue still holds "
+            f"{self.maxsize} (maxsize) undrained items. The slowest "
+            "consumer is the model worker's drain->ring-write path "
+            "(ModelLearningWorker._refresh_data); raise "
+            "RunConfig.push_timeout_s, enlarge the queue, or check "
+            "whether the model process is wedged/compiling."
+        ) from None
 
     def push(self, traj, *, collector_id: int = 0,
              timeout: Optional[float] = None) -> int:
@@ -469,51 +540,87 @@ class ProcDataServer:
         try:
             self._q.put(host, timeout=timeout)
         except _queue.Full:
-            raise BackpressureError(
-                f"trajectory queue full: collector {collector_id} waited "
-                f"{timeout:.1f}s to push and the queue still holds "
-                f"{self.maxsize} (maxsize) undrained trajectories. The "
-                "slowest consumer is the model worker's drain->ring-write "
-                "path (ModelLearningWorker._refresh_data); raise "
-                "RunConfig.push_timeout_s, enlarge the queue, or check "
-                "whether the model process is wedged/compiling."
-            ) from None
+            self._raise_backpressure(collector_id, timeout)
         with self._lock:
             self._total.value += 1
-            self._inflight[collector_id % self.n_collectors] = 0
+            self._settle_inflight(collector_id, 1)
             return self._total.value
 
-    def try_claim(self, collector_id: int = 0) -> bool:
-        """Reserve one collection slot toward the global target; marks
-        the collector in-flight until its push lands. False once the
-        target is fully claimed (no target configured: always True)."""
+    def push_batch(self, batch, n: int, *, collector_id: int = 0,
+                   timeout: Optional[float] = None) -> int:
+        """Push ``n`` trajectories stacked as one batch (dict of
+        (n, H, ...) arrays — a farm step's output). The whole batch is
+        host-materialised once and rides the queue as ONE item (a farm
+        at B=256 would otherwise blow through ``maxsize`` per step);
+        ``drain`` unstacks it into per-trajectory dicts of zero-copy np
+        views on the consumer side."""
+        host = jax.tree.map(np.asarray, batch)  # process boundary
+        timeout = self.push_timeout if timeout is None else timeout
+        try:
+            self._q.put(("batch", int(n), host), timeout=timeout)
+        except _queue.Full:
+            self._raise_backpressure(collector_id, timeout)
         with self._lock:
-            if self._target is not None \
-                    and self._tickets.value >= self._target:
-                return False
-            self._tickets.value += 1
-            self._inflight[collector_id % self.n_collectors] = 1
-            return True
+            self._total.value += int(n)
+            self._settle_inflight(collector_id, int(n))
+            return self._total.value
 
-    def refund_inflight(self, collector_id: int) -> bool:
-        """Supervisor hook: return the ticket of a collector that died
-        between claim and push (its in-flight flag is still set). Called
-        by the parent when respawning collector ``collector_id``."""
+    def _settle_inflight(self, collector_id: int, n: int) -> None:
+        # already holding self._lock. Claims are optional (pushes may
+        # arrive unclaimed before a target is armed), so clamp at zero.
+        i = collector_id % self.n_collectors
+        self._inflight[i] = max(int(self._inflight[i]) - n, 0)
+
+    def try_claim(self, collector_id: int = 0, k: int = 1) -> int:
+        """Reserve up to ``k`` collection slots toward the global
+        target; adds the grant to the collector's in-flight count until
+        its pushes land. Returns ``min(k, remaining)`` — 0 once the
+        target is fully claimed (no target configured: always ``k``).
+        The denied path sleeps ``claim_backoff`` outside the lock so
+        losers of the final-claim race back off instead of spinning."""
+        k = int(k)
+        with self._lock:
+            g = k if self._target is None else \
+                min(k, max(self._target - self._tickets.value, 0))
+            if g > 0:
+                self._tickets.value += g
+                self._inflight[collector_id % self.n_collectors] += g
+                return g
+        time.sleep(self.claim_backoff)
+        return 0
+
+    def refund_inflight(self, collector_id: int) -> int:
+        """Supervisor hook: return every ticket of a collector that died
+        between claim and push (its in-flight count is still positive).
+        Called by the parent when respawning collector ``collector_id``;
+        returns the number of tickets refunded — a farm collector
+        SIGKILLed mid-batch gets its WHOLE undelivered remainder back,
+        so the criterion can still land exactly."""
         with self._lock:
             i = collector_id % self.n_collectors
-            if self._inflight[i]:
+            g = int(self._inflight[i])
+            if g > 0:
                 self._inflight[i] = 0
-                self._tickets.value -= 1
-                return True
-            return False
+                self._tickets.value -= g
+            return g
 
     def drain(self) -> List[Any]:
+        """Move everything queued to the caller as a flat list of
+        per-trajectory dicts; batch items are unstacked into zero-copy
+        np views along their lane axis."""
         items: List[Any] = []
         while True:
             try:
-                items.append(self._q.get_nowait())
+                item = self._q.get_nowait()
             except _queue.Empty:
                 return items
+            if isinstance(item, tuple) and len(item) == 3 \
+                    and item[0] == "batch":
+                _, n, batch = item
+                items.extend({k: v[i] for k, v in batch.items()}
+                             for i in range(n))
+            else:
+                items.append(item)
 
     @property
     def total_pushed(self) -> int:

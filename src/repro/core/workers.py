@@ -38,9 +38,8 @@ device-resident in every mode.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -109,29 +108,81 @@ def collector_key(key, collector_id: int):
         key, collector_id)
 
 
-def default_burst(n_collectors: int) -> int:
-    """Drain burst capacity for a fleet of N: the one heuristic shared
-    by the in-process engines and the procs-mode child model worker."""
-    return max(8, 2 * int(n_collectors))
+def default_burst(n_collectors: int, envs_per_step: int = 1) -> int:
+    """Drain burst capacity for a fleet of N collectors running B envs
+    each: the one heuristic shared by the in-process engines and the
+    procs-mode child model worker. An env farm's whole batch must fit
+    one burst so its drain stays a single compiled scatter per chunk."""
+    return max(8, 2 * int(n_collectors), int(envs_per_step))
 
 
-@functools.lru_cache(maxsize=64)
-def _rollout_jit(env, noise_scale: float):
-    """One compiled rollout per (env value, noise scale) — N same-scale
-    fleet members share a single trace/compile instead of paying N
-    identical ones (envs are small frozen dataclasses, so value-equal
-    envs share; bounded like runtime._EVAL_CACHE). Per-device
-    executables are jax's own cache, keyed on input placement."""
+# One compiled rollout program per (env value, noise scale, batch size)
+# — N same-scale fleet members share a single trace/compile instead of
+# paying N identical ones (envs are small frozen dataclasses, so
+# value-equal envs share). BOUNDED exactly like runtime._EVAL_CACHE
+# (ISSUE 6 satellite): plain dict in insertion order, pop + reinsert on
+# hit = LRU touch, oldest evicted past _ROLLOUT_CACHE_MAX — bench
+# sweeps over noise scales / batch sizes can no longer grow it without
+# limit, and an evicted entry strands nothing (each worker holds its
+# own fn, which stays valid standalone). Batch size None keys the
+# single-trajectory program; an int keys the B-lane farm program.
+_ROLLOUT_CACHE: Dict[Any, Callable] = {}
+_ROLLOUT_CACHE_MAX = 64
+
+
+def clear_rollout_cache() -> None:
+    """Drop every cached compiled rollout, single and batched.
+    Benchmarks call this between sweep groups."""
+    _ROLLOUT_CACHE.clear()
+
+
+def _rollout_cache_put(cache_key, build: Callable) -> Callable:
+    fn = _ROLLOUT_CACHE.pop(cache_key, None)    # pop + reinsert = LRU
+    if fn is None:
+        fn = build()
+    _ROLLOUT_CACHE[cache_key] = fn
+    while len(_ROLLOUT_CACHE) > _ROLLOUT_CACHE_MAX:  # dicts iterate in
+        del _ROLLOUT_CACHE[next(iter(_ROLLOUT_CACHE))]  # insertion order
+    return fn
+
+
+def _sampler_for(noise_scale: float):
     if noise_scale == 1.0:
-        sampler = PI.sample_action      # bit-identical lone-collector
-    else:                               # path, and no spurious * 1.0
-        def sampler(p, s, k):
-            return PI.sample_action_scaled(p, s, k, noise_scale)
-    return jax.jit(lambda p, k: env.rollout(k, sampler, p))
+        return PI.sample_action         # bit-identical lone-collector
+    #                                     path, and no spurious * 1.0
+
+    def sampler(p, s, k):
+        return PI.sample_action_scaled(p, s, k, noise_scale)
+    return sampler
+
+
+def _rollout_jit(env, noise_scale: float):
+    """Compiled single-trajectory rollout for (env value, noise scale).
+    Per-device executables are jax's own cache, keyed on placement."""
+    sampler = _sampler_for(noise_scale)
+    return _rollout_cache_put(
+        (env, float(noise_scale), None),
+        lambda: jax.jit(lambda p, k: env.rollout(k, sampler, p)))
+
+
+def _rollout_batch_jit(env, noise_scale: float, n: int):
+    """Compiled B-lane farm rollout for (env value, noise scale, B) —
+    one vmapped scan per batch size, compiled once and shared across
+    same-shape claimers (a partial batch of g < B lanes hits the same
+    cache entry as a worker whose full batch IS g, so the two produce
+    identical trajectories from identical keys)."""
+    sampler = _sampler_for(noise_scale)
+    n = int(n)
+    return _rollout_cache_put(
+        (env, float(noise_scale), n),
+        lambda: jax.jit(
+            lambda p, k: env.rollout_batch(k, sampler, p, n)))
 
 
 class DataCollectionWorker:
-    """Algorithm 1. Pull policy θ -> collect ONE trajectory -> push.
+    """Algorithm 1. Pull policy θ -> collect a batch of trajectories ->
+    push (``envs_per_step=1``, the default, collects exactly ONE — the
+    pre-farm worker, bit for bit).
 
     The pull is version-gated: the worker keeps a device-resident policy
     cache and only swaps it when the server holds a newer version.
@@ -139,12 +190,20 @@ class DataCollectionWorker:
     Fleet-aware: ``collector_id`` selects this collector's RNG stream,
     its device within the collector sub-mesh (round-robin, see
     ``roles.collector_sharding``), and — via ``noise_scale`` — its rung
-    on the fleet's exploration schedule."""
+    on the fleet's exploration schedule.
+
+    Farm-aware (ISSUE 6): ``envs_per_step=B`` makes every ``step``
+    simulate B robots via one vmapped rollout (``Env.rollout_batch``,
+    one compile per (env, noise, B)) and push all B trajectories as one
+    stacked batch. The worker splits its key ONCE per step regardless
+    of B — lane streams are derived inside the batch program
+    (``envs.base.lane_keys``: lane 0 keeps the step key) — so the B=1
+    stream is exactly the pre-farm stream."""
 
     def __init__(self, env, policy_server: ParameterServer,
                  data_server: DataServer, init_policy_params, key,
                  *, speed: float = 1.0, mesh=None, collector_id: int = 0,
-                 noise_scale: float = 1.0):
+                 noise_scale: float = 1.0, envs_per_step: int = 1):
         """``init_policy_params=None`` (procs mode): the collector has no
         in-process policy worker to borrow initial params from — it idles
         (``step`` returns None) until the policy process publishes
@@ -154,6 +213,10 @@ class DataCollectionWorker:
         self.data_server = data_server
         self.collector_id = int(collector_id)
         self.noise_scale = float(noise_scale)
+        self.envs_per_step = int(envs_per_step)
+        if self.envs_per_step < 1:
+            raise ValueError(f"envs_per_step must be >= 1, got "
+                             f"{self.envs_per_step}")
         self._key = collector_key(key, self.collector_id)
         self._policy_cache = (None if init_policy_params is None else
                               jax.tree.map(jnp.asarray, init_policy_params))
@@ -170,7 +233,13 @@ class DataCollectionWorker:
             if self._policy_cache is not None:
                 self._policy_cache = jax.device_put(self._policy_cache,
                                                     self._sharding)
+        # B=1 keeps the SINGLE-rollout compiled program (bit-identity
+        # with the pre-farm engine); B>1 holds its own farm program so
+        # cache eviction can't cost a recompile mid-run
         self._rollout = _rollout_jit(env, self.noise_scale)
+        self._rollout_batch = (
+            None if self.envs_per_step == 1 else
+            _rollout_batch_jit(env, self.noise_scale, self.envs_per_step))
 
     def poll_policy(self) -> bool:
         """Refresh the policy cache (version-gated) WITHOUT collecting.
@@ -183,16 +252,35 @@ class DataCollectionWorker:
             self._policy_cache = _to_device(fresh)
         return self._policy_cache is not None
 
-    def step(self) -> Optional[float]:
-        """One trajectory; returns its robot-time duration, or None when
-        no policy has been published yet (procs-mode warmup)."""
+    def step(self, n: Optional[int] = None) -> Optional[float]:
+        """One batch of ``n`` trajectories (default: the worker's full
+        ``envs_per_step``); returns its robot-time duration, or None
+        when no policy has been published yet (procs-mode warmup).
+
+        ``n < envs_per_step`` runs a PARTIAL batch through a smaller
+        compiled variant — the engines pass the ticket grant here when
+        fewer than B slots remain toward the global criterion, so the
+        run lands exactly on ``total_trajs`` (at most one extra compile,
+        at the very end of a run). The batch simulates n robots in
+        PARALLEL, so the robot-time duration is one trajectory's
+        regardless of n."""
         if not self.poll_policy():                      # Pull (gated)
             return None
+        g = self.envs_per_step if n is None else int(n)
+        # ONE key split per step whatever g is: the B=1 stream is the
+        # pre-farm stream, and lanes derive inside the batch program
         self._key, k = jax.random.split(self._key)
-        traj = self._rollout(self._policy_cache, k)     # Step
-        self.data_server.push(traj,
-                              collector_id=self.collector_id)  # Push
-        self.collected += 1
+        if g == 1:
+            traj = self._rollout(self._policy_cache, k)     # Step
+            self.data_server.push(traj,
+                                  collector_id=self.collector_id)  # Push
+        else:
+            fn = (self._rollout_batch if g == self.envs_per_step
+                  else _rollout_batch_jit(self.env, self.noise_scale, g))
+            batch = fn(self._policy_cache, k)               # Step (farm)
+            self.data_server.push_batch(
+                batch, g, collector_id=self.collector_id)   # Push
+        self.collected += g
         return (self.env.horizon * self.env.dt) / self.speed
 
 
@@ -403,7 +491,8 @@ def _proc_collector(spec, ch, key, collector_id: int = 0):
     w = DataCollectionWorker(spec.env, ch.policy_server, ch.data, None,
                              key, speed=rc.collect_speed,
                              collector_id=collector_id,
-                             noise_scale=sched.scale_for(collector_id))
+                             noise_scale=sched.scale_for(collector_id),
+                             envs_per_step=rc.envs_per_collector)
     # warmup: don't claim a collection slot until a policy exists — a
     # claimed ticket must always be fulfilled by the very next step, or
     # the fleet's exact stopping criterion would stall on it
@@ -411,13 +500,14 @@ def _proc_collector(spec, ch, key, collector_id: int = 0):
         time.sleep(0.005)
     # restart-safe stopping criterion: tickets live in the shared
     # ProcDataServer, so a restarted collector resumes the GLOBAL count
-    # (the parent refunds the ticket of a crash-interrupted trajectory)
+    # (the parent refunds the tickets of a crash-interrupted batch)
     while not ch.stop.is_set():
-        if not ch.data.try_claim(collector_id):
+        g = ch.data.try_claim(collector_id, k=w.envs_per_step)
+        if not g:
             break                   # global target fully claimed: done
         t_step = time.monotonic()
         try:
-            dur = w.step()
+            dur = w.step(g)
         except Exception:
             if ch.stop.is_set():    # queue torn down mid-push: clean exit
                 break
@@ -434,7 +524,8 @@ def _proc_model(spec, ch, key, resume_dir):
                             ema_weight=rc.ema_weight,
                             early_stop=rc.early_stop,
                             min_trajs=rc.min_warmup_trajs,
-                            burst=default_burst(rc.n_collectors))
+                            burst=default_burst(rc.n_collectors,
+                                                rc.envs_per_collector))
     snap, _ = _load_snapshot(resume_dir, spec)
     if snap is not None:
         # crash restart: resume from the parent's latest checkpoint and

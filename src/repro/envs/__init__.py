@@ -1,3 +1,3 @@
 from repro.envs.arm import Arm7, Reacher2, make_env
-from repro.envs.base import Env
+from repro.envs.base import Env, lane_keys
 from repro.envs.classic import CartpoleSwingup, Pendulum, SpringHopper

@@ -19,6 +19,18 @@ import jax
 import jax.numpy as jnp
 
 
+def lane_keys(key, n: int):
+    """Per-lane RNG streams for a batched rollout (the env farm,
+    ISSUE 6): lane 0 keeps ``key`` UNTOUCHED — the same derivation rule
+    as ``workers.collector_key`` — and every other lane folds its index
+    in. A farm of one therefore consumes exactly the single-rollout
+    stream, and distinct lanes draw independent streams."""
+    if n == 1:
+        return key[None]
+    return jnp.stack([key] + [jax.random.fold_in(key, i)
+                              for i in range(1, n)])
+
+
 @dataclasses.dataclass(frozen=True)
 class Env:
     obs_dim: int
@@ -57,6 +69,31 @@ class Env:
         _, (obs, act, nobs, rew) = jax.lax.scan(
             step_fn, s0, jax.random.split(key, H))
         return {"obs": obs, "act": act, "next_obs": nobs, "rew": rew}
+
+    def rollout_batch(self, key, policy_fn, policy_params, n: int, *,
+                      horizon=None):
+        """Collect ``n`` trajectories at once — the env farm (ISSUE 6):
+        one vmapped scan simulates n robots on one device, so a
+        collector's per-step cost grows far slower than n. Returns the
+        same dict as :meth:`rollout` with a leading batch axis
+        ``(n, H, ...)``.
+
+        Lane streams come from :func:`lane_keys` (lane 0 keeps ``key``).
+        ``n == 1`` DELEGATES to :meth:`rollout` instead of vmapping, so a
+        one-robot farm is the single-rollout program bit for bit —
+        vmapped arithmetic is not guaranteed bitwise-equal to its scalar
+        counterpart, and the B=1 identity invariant matters more than
+        uniformity here."""
+        n = int(n)
+        if n < 1:
+            raise ValueError(f"rollout_batch needs n >= 1, got {n}")
+        if n == 1:
+            traj = self.rollout(key, policy_fn, policy_params,
+                                horizon=horizon)
+            return jax.tree.map(lambda x: x[None], traj)
+        return jax.vmap(
+            lambda k: self.rollout(k, policy_fn, policy_params,
+                                   horizon=horizon))(lane_keys(key, n))
 
 
 def angle_normalize(x):

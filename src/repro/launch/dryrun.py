@@ -266,14 +266,17 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def dryrun_roles(*, multi_pod: bool = False, ratios=(1, 2, 1),
-                 n_collectors: int = 1, verbose: bool = True) -> dict:
+                 n_collectors: int = 1, envs_per_collector: int = 1,
+                 verbose: bool = True) -> dict:
     """Role-split sanity for the async MBRL pod path: split the
     production mesh into collector/model/policy sub-meshes
     (core/roles.py) and report their shapes and the role shardings the
     workers would jit against — plus how a collector FLEET of
     ``n_collectors`` spreads round-robin over the collector sub-mesh's
-    devices. Pure mesh bookkeeping — nothing is allocated (512 forced
-    host devices stand in for the pod)."""
+    devices, and how many simulated robots the fleet runs in total when
+    each collector is an env FARM of ``envs_per_collector`` vmapped
+    lanes (ISSUE 6). Pure mesh bookkeeping — nothing is allocated (512
+    forced host devices stand in for the pod)."""
     from repro.core.roles import (batch_sharded, collector_sharding,
                                   replicated, split_roles)
     from repro.launch.mesh import make_production_mesh
@@ -289,6 +292,8 @@ def dryrun_roles(*, multi_pod: bool = False, ratios=(1, 2, 1),
                str(batch_sharded(roles.model, roles.axis)),
            "policy_param_sharding": str(replicated(roles.policy)),
            "n_collectors": n_collectors,
+           "envs_per_collector": envs_per_collector,
+           "sim_robots_total": n_collectors * envs_per_collector,
            "fleet_devices": fleet,
            "collector_devices_total": int(roles.collector.devices.size)}
     if verbose:
@@ -311,6 +316,10 @@ def main():
     ap.add_argument("--n-collectors", type=int, default=4,
                     help="with --roles: report the fleet's round-robin "
                          "device assignment on the collector sub-mesh")
+    ap.add_argument("--envs-per-collector", type=int, default=1,
+                    help="with --roles: report the fleet's total "
+                         "simulated-robot count when each collector "
+                         "farms B vmapped env lanes")
     ap.add_argument("--out", default="dryrun_results.json")
     ap.add_argument("--resume", action="store_true",
                     help="skip combos already present in --out")
@@ -320,7 +329,8 @@ def main():
         dryrun_roles(multi_pod=args.multi_pod,
                      ratios=tuple(int(x) for x in
                                   args.role_ratios.split(",")),
-                     n_collectors=args.n_collectors)
+                     n_collectors=args.n_collectors,
+                     envs_per_collector=args.envs_per_collector)
         return
 
     archs = registry.ARCH_IDS if (args.all or not args.arch) \

@@ -64,10 +64,14 @@ def run_mbrl(args):
                    early_stop=not args.no_early_stop,
                    ckpt_dir=args.ckpt_dir,
                    n_collectors=args.n_collectors,
-                   collect_noise=collect_noise)
+                   collect_noise=collect_noise,
+                   envs_per_collector=args.envs_per_collector)
     if args.n_collectors > 1 and args.engine != "async":
         raise SystemExit("--n-collectors > 1 needs --engine async "
                          "(collector fleets belong to the async engine)")
+    if args.envs_per_collector > 1 and args.engine != "async":
+        raise SystemExit("--envs-per-collector > 1 needs --engine async "
+                         "(env farms belong to the async engine)")
     if args.mode == "procs" and args.engine != "async":
         raise SystemExit("--mode procs is only meaningful with "
                          "--engine async")
@@ -96,6 +100,8 @@ def run_mbrl(args):
         n = tr.run_cfg.n_collectors
         out["fleet"] = {
             "n_collectors": n,
+            "envs_per_collector": tr.run_cfg.envs_per_collector,
+            "sim_robots": n * tr.run_cfg.envs_per_collector,
             "noise_scales": [tr.exploration.scale_for(i)
                              for i in range(n)],
         }
@@ -179,6 +185,12 @@ def main():
                     help="comma-separated per-collector exploration "
                          "noise scales, cycled across the fleet "
                          "(default: 1.0 everywhere)")
+    ap.add_argument("--envs-per-collector", type=int, default=1,
+                    help="env farm (async engine, all modes): each "
+                         "collector simulates B envs per step through "
+                         "one vmapped rollout and pushes the whole "
+                         "batch at once (1 = classic single-rollout "
+                         "collector)")
     ap.add_argument("--ema-weight", type=float, default=0.9)
     ap.add_argument("--no-early-stop", action="store_true")
     ap.add_argument("--mesh", default="none",

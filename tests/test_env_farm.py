@@ -1,0 +1,252 @@
+"""Vectorized env farm (ISSUE 6): batched rollouts make every collector
+B simulated robots.
+
+What is proven here:
+
+* ``lane_keys``: lane 0 keeps the step key untouched (the farm-of-one
+  consumes exactly the single-rollout stream), other lanes are distinct;
+* ``Env.rollout_batch``: leading batch axis, deterministic, distinct
+  lanes, and n=1 DELEGATES to the scalar rollout bit for bit (vmapped
+  lane 0 is not guaranteed bitwise-equal to the scalar program);
+* the farm worker pushes its whole batch per step, splits its key ONCE
+  per step, and a PARTIAL grant g < B runs the same compiled program as
+  a worker whose full batch is g — identical trajectories from
+  identical keys, so the end-of-run partial batch is reproducible;
+* the compiled-rollout cache is LRU-bounded (ISSUE 6 satellite) and
+  clearable, and workers keep their own refs so eviction strands nothing;
+* batch-aware tickets: ``try_claim(k)`` grants partial batches at the
+  target edge, ``push_batch`` settles the grant and drains identically
+  to sequential pushes, refunds return the exact unfilled count, and a
+  denied claim backs off instead of spinning (ISSUE 6 satellite);
+* the global ``total_trajs`` criterion lands EXACTLY in event and
+  threads modes even when B does not divide it, with deterministic
+  event traces per seed (procs: tests/test_procs.py).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AsyncTrainer, DataServer, RunConfig
+from repro.core import workers as W
+from repro.envs import lane_keys, make_env
+from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
+
+
+def build(env, n_models=2):
+    ens = EnsembleConfig(env.obs_dim, env.act_dim, hidden=32,
+                         n_models=n_models)
+    pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=16)
+    acfg = AlgoConfig(algo="me-trpo", imagine_batch=16, imagine_horizon=15,
+                      n_models=n_models)
+    return ens, make_algo(acfg, pol, jax.vmap(env.reward), env.reset_batch)
+
+
+def tree_equal(a, b) -> bool:
+    return all(bool(jnp.array_equal(x, y)) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _random_policy(env):
+    def policy_fn(params, s, k):
+        return jax.random.uniform(k, (env.act_dim,), minval=-1.0,
+                                  maxval=1.0)
+    return policy_fn
+
+
+# ----------------------------------------------------------- lane streams
+def test_lane_keys_lane0_is_key_and_lanes_distinct():
+    key = jax.random.key(3)
+    lanes = lane_keys(key, 4)
+    assert lanes.shape == (4,)
+    data = jax.random.key_data(lanes)
+    np.testing.assert_array_equal(np.asarray(data[0]),
+                                  np.asarray(jax.random.key_data(key)))
+    rows = [tuple(np.asarray(data[i]).tolist()) for i in range(4)]
+    assert len(set(rows)) == 4, "lane streams must be pairwise distinct"
+    np.testing.assert_array_equal(
+        np.asarray(jax.random.key_data(lane_keys(key, 1))),
+        np.asarray(jax.random.key_data(key))[None])
+
+
+# ---------------------------------------------------------- rollout_batch
+def test_rollout_batch_shapes_determinism_distinct_lanes():
+    env = make_env("pendulum")
+    pf = _random_policy(env)
+    key = jax.random.key(0)
+    batch = env.rollout_batch(key, pf, None, 3)
+    H = env.horizon
+    assert batch["obs"].shape == (3, H, env.obs_dim)
+    assert batch["act"].shape == (3, H, env.act_dim)
+    assert batch["next_obs"].shape == (3, H, env.obs_dim)
+    assert batch["rew"].shape == (3, H)
+    again = env.rollout_batch(key, pf, None, 3)
+    assert tree_equal(batch, again), "same key must reproduce the batch"
+    assert not bool(jnp.array_equal(batch["act"][0], batch["act"][1])), \
+        "distinct lanes must draw distinct actions"
+    assert not bool(jnp.array_equal(batch["act"][1], batch["act"][2]))
+
+
+def test_rollout_batch_n1_delegates_bit_identical():
+    env = make_env("pendulum")
+    pf = _random_policy(env)
+    key = jax.random.key(7)
+    single = env.rollout(key, pf, None)
+    farm1 = env.rollout_batch(key, pf, None, 1)
+    for k in single:
+        np.testing.assert_array_equal(np.asarray(farm1[k][0]),
+                                      np.asarray(single[k]),
+                                      err_msg=f"n=1 farm differs on {k}")
+    with pytest.raises(ValueError, match="n >= 1"):
+        env.rollout_batch(key, pf, None, 0)
+
+
+# ------------------------------------------------------------ farm worker
+def test_worker_batch_step_pushes_whole_batch_once():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    tr = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=6, seed=0),
+                      envs_per_collector=3)
+    w = tr.collectors[0]
+    dur = w.step()
+    assert dur == pytest.approx(env.horizon * env.dt), \
+        "B robots run in parallel: one trajectory's robot time"
+    assert w.collected == 3
+    trajs = tr.data_server.drain()
+    assert len(trajs) == 3, "the whole batch must arrive as trajectories"
+    assert trajs[0]["obs"].shape == (env.horizon, env.obs_dim)
+    assert not bool(jnp.array_equal(trajs[0]["act"], trajs[1]["act"]))
+
+
+def test_partial_grant_shares_program_with_full_batch_of_same_size():
+    """A partial batch g < B runs THE SAME compiled program object as a
+    worker whose full batch is g — and produces identical trajectories
+    from identical keys (the end-of-run partial batch is reproducible,
+    not a differently-compiled cousin)."""
+    W.clear_rollout_cache()
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    big = AsyncTrainer(env, ens, algo, RunConfig(total_trajs=8, seed=0),
+                       envs_per_collector=4).collectors[0]
+    ens, algo = build(env)
+    tr_small = AsyncTrainer(env, ens, algo,
+                            RunConfig(total_trajs=8, seed=0),
+                            envs_per_collector=2)
+    small = tr_small.collectors[0]
+    assert big.step(2) is not None          # partial grant through B=4
+    assert small.step() is not None         # full batch of the same size
+    assert small._rollout_batch is W._rollout_batch_jit(env, 1.0, 2), \
+        "partial grants must hit the full-batch worker's cache entry"
+    a, b = big.data_server.drain(), tr_small.data_server.drain()
+    assert len(a) == len(b) == 2
+    for ta, tb in zip(a, b):
+        assert tree_equal(ta, tb), \
+            "same key + same program must mean identical trajectories"
+
+
+def test_rollout_cache_is_lru_bounded_and_clearable():
+    W.clear_rollout_cache()
+    env = make_env("pendulum")
+    keep = W._rollout_jit(env, 1.0)
+    for i in range(W._ROLLOUT_CACHE_MAX + 8):
+        W._rollout_jit(env, 2.0 + i * 0.125)     # distinct cache keys
+        W._rollout_jit(env, 1.0)                 # LRU touch: stays hot
+    assert len(W._ROLLOUT_CACHE) <= W._ROLLOUT_CACHE_MAX
+    assert W._rollout_jit(env, 1.0) is keep, \
+        "a touched entry must survive eviction pressure"
+    assert W._rollout_jit(env, 2.0) is not None  # oldest was evicted,
+    #                                              rebuilt fresh; holders
+    #                                              of the old fn are fine
+    W.clear_rollout_cache()
+    assert len(W._ROLLOUT_CACHE) == 0
+
+
+# ------------------------------------------------- batch-aware ticketing
+def test_data_server_batch_claims_partial_grants_and_refund():
+    ds = DataServer()
+    ds.set_target(7)
+    assert ds.try_claim(0, k=4) == 4
+    assert ds.try_claim(1, k=4) == 3, "partial grant at the target edge"
+    assert ds.try_claim(0, k=2) == 0, "target exhausted"
+    assert ds.refund_inflight(1) == 3, "refund returns the exact count"
+    assert ds.refund_inflight(1) == 0, "double refund is a no-op"
+    assert ds.try_claim(1, k=5) == 3, "refund reopened the slots"
+    batch = {"x": np.arange(6, dtype=np.float32).reshape(3, 2)}
+    ds.push_batch(batch, 3, collector_id=1)
+    assert ds.total_pushed == 3
+    assert ds.refund_inflight(1) == 0, "push_batch settled the grant"
+
+
+def test_push_batch_drains_identically_to_sequential_pushes():
+    arr = np.arange(12, dtype=np.float32).reshape(4, 3)
+    ds_batch, ds_seq = DataServer(), DataServer()
+    ds_batch.push_batch({"x": arr}, 4)
+    for i in range(4):
+        ds_seq.push({"x": arr[i]})
+    a, b = ds_batch.drain(), ds_seq.drain()
+    assert ds_batch.total_pushed == ds_seq.total_pushed == 4
+    assert len(a) == len(b) == 4
+    for ta, tb in zip(a, b):
+        np.testing.assert_array_equal(ta["x"], tb["x"])
+        assert ta["x"].shape == (3,), "drain yields per-traj rows"
+
+
+def test_denied_claims_back_off_instead_of_spinning():
+    """ISSUE 6 satellite: a collector that lost the race for the last
+    tickets sleeps briefly in the denied path (outside the lock) rather
+    than hammering it; granted claims pay nothing."""
+    ds = DataServer(claim_backoff=0.05)
+    ds.set_target(1)
+    t0 = time.perf_counter()
+    assert ds.try_claim(0) == 1
+    assert time.perf_counter() - t0 < 0.04, "a granted claim never sleeps"
+    t0 = time.perf_counter()
+    assert ds.try_claim(1) == 0
+    assert time.perf_counter() - t0 >= 0.045, "denial must back off"
+
+    import multiprocessing as mp
+
+    from repro.core.servers import ProcDataServer
+    pds = ProcDataServer(mp.get_context("spawn"), n_collectors=2,
+                         target=1, claim_backoff=0.05)
+    t0 = time.perf_counter()
+    assert pds.try_claim(0) == 1
+    assert time.perf_counter() - t0 < 0.04
+    t0 = time.perf_counter()
+    assert pds.try_claim(1) == 0
+    assert time.perf_counter() - t0 >= 0.045
+
+
+# ------------------------------------------------- exact criterion, B ∤ T
+def test_event_farm_exact_criterion_and_deterministic():
+    """B=3 does not divide total_trajs=10: the event engine claims
+    min(B, remaining) per turn, someone runs the partial variant, the
+    criterion lands exactly — and the trace is bit-reproducible."""
+    env = make_env("pendulum")
+    traces = []
+    for _ in range(2):
+        ens, algo = build(env)
+        tr = AsyncTrainer(env, ens, algo,
+                          RunConfig(total_trajs=10, seed=0),
+                          n_collectors=2, envs_per_collector=3)
+        traces.append(tr.run())
+        assert tr.data_server.total_pushed == 10, \
+            "farm criterion must land exactly, never overshoot"
+        assert sum(c.collected for c in tr.collectors) == 10
+    assert traces[0] == traces[1], \
+        "event farm must be deterministic per seed"
+
+
+def test_threads_farm_exact_criterion_b_not_dividing():
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    rc = RunConfig(total_trajs=9, seed=0)
+    tr = AsyncTrainer(env, ens, algo, rc, mode="threads",
+                      n_collectors=2, envs_per_collector=4)
+    trace = tr.run()
+    assert tr.data_server.total_pushed == 9, \
+        "threads farm criterion must land exactly with B ∤ total"
+    assert sum(c.collected for c in tr.collectors) == 9
+    assert trace and trace[-1]["trajs"] == 9

@@ -16,8 +16,14 @@ What is proven here:
   scales) change the collected actions without touching collector 0;
 * the multi-producer drain path: ``ReplayBuffer.add_trajs`` writes a
   burst bit-identically to sequential ``add_traj`` calls, in one
-  compiled scatter per chunk, compiling once across burst sizes.
+  compiled scatter per chunk, compiling once across burst sizes;
+* env-farm guardrails (ISSUE 6): ``envs_per_collector=1`` stays
+  bit-identical to the pre-farm engine (the batched path is covered in
+  tests/test_env_farm.py), and the exploration ladder round-trips
+  pickling through ``ProcSpec``.
 """
+import pickle
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -25,7 +31,7 @@ import pytest
 
 from repro.core import AsyncTrainer, DataServer, ReplayBuffer, RunConfig
 from repro.core.servers import _ring_write_burst_impl
-from repro.core.workers import ExplorationSchedule, collector_key
+from repro.core.workers import ExplorationSchedule, ProcSpec, collector_key
 from repro.envs import make_env
 from repro.mbrl import AlgoConfig, EnsembleConfig, PolicyConfig, make_algo
 from repro.utils.jit_stats import trace_counted
@@ -178,6 +184,49 @@ def test_exploration_schedule_cycles_and_ladder():
         (1.0, 1.5), "a lone varied rung takes the hi endpoint"
 
 
+def test_exploration_ladder_monotone_and_proc_spec_pickle():
+    """ISSUE 6 satellite: ladder(1) is exactly the plain policy, varied
+    rungs are monotone non-decreasing for every fleet size, and a
+    schedule survives pickling through ProcSpec (what the spawn context
+    actually ships to collector children) with scale_for intact."""
+    assert ExplorationSchedule.ladder(1).noise_scales == (1.0,)
+    assert ExplorationSchedule.ladder(1).scale_for(0) == 1.0
+    for n in (2, 3, 4, 5, 8):
+        lad = ExplorationSchedule.ladder(n, lo=0.5, hi=1.5)
+        assert lad.scale_for(0) == 1.0
+        varied = lad.noise_scales[1:]
+        assert list(varied) == sorted(varied), \
+            f"varied rungs must be monotone at n={n}: {varied}"
+        assert min(varied) >= 0.5 and max(varied) <= 1.5
+    lad = ExplorationSchedule.ladder(4, lo=0.25, hi=2.0)
+    spec = ProcSpec(env=None, ens_cfg=None, algo_cfg=None, pol_cfg=None,
+                    run_cfg=None, seed=0, exploration=lad)
+    back = pickle.loads(pickle.dumps(spec)).exploration
+    assert back.noise_scales == lad.noise_scales
+    assert [back.scale_for(i) for i in range(8)] == \
+        [lad.scale_for(i) for i in range(8)]
+
+
+def test_envs_per_collector_one_is_bit_identical_to_pre_farm():
+    """ISSUE 6 acceptance: an explicit B=1 farm IS the pre-farm engine —
+    same single-rollout program object, bit-identical event trace."""
+    from repro.core.workers import _rollout_jit
+    env = make_env("pendulum")
+    ens, algo = build(env)
+    rc = RunConfig(total_trajs=6, seed=0)
+    tr_plain = AsyncTrainer(env, ens, algo, rc)
+    trace_plain = tr_plain.run()
+    ens, algo = build(env)
+    tr_farm = AsyncTrainer(env, ens, algo, rc, envs_per_collector=1)
+    assert tr_farm.collectors[0]._rollout_batch is None, \
+        "B=1 must not build a batched program"
+    assert tr_farm.collectors[0]._rollout is _rollout_jit(env, 1.0), \
+        "B=1 must reuse the shared single-rollout program"
+    trace_farm = tr_farm.run()
+    assert trace_farm == trace_plain, \
+        "B=1 farm trace must be bit-identical to the pre-farm engine"
+
+
 def test_exploration_noise_scale_changes_actions_only_off_rung_zero():
     """A noise-scaled collector draws different actions from the same
     policy/key; scale 1.0 is exactly the plain sampler."""
@@ -216,7 +265,7 @@ def test_data_server_tickets_exact_with_preexisting_pushes():
     ds.set_target(5)
     grants = sum(ds.try_claim() for _ in range(10))
     assert grants == 2, "only target - already_pushed claims may be granted"
-    assert ds.try_claim() is False
+    assert ds.try_claim() == 0
 
 
 # ------------------------------------------------------- burst ring writes

@@ -199,15 +199,41 @@ def test_proc_data_server_tickets_and_refund():
     at the target, an in-flight crash is refundable exactly once."""
     import multiprocessing as mp
     ds = ProcDataServer(mp.get_context("spawn"), n_collectors=2, target=3)
-    assert ds.try_claim(0) and ds.try_claim(1) and ds.try_claim(0)
-    assert not ds.try_claim(1), "claims must stop at the target"
-    # collector 0 'crashed' between claim and push: refund reopens a slot
-    assert ds.refund_inflight(0) is True
-    assert ds.refund_inflight(0) is False, "double refund must be a no-op"
-    assert ds.try_claim(1)
+    assert ds.try_claim(0) == 1 and ds.try_claim(1) == 1
+    assert ds.try_claim(0) == 1
+    assert ds.try_claim(1) == 0, "claims must stop at the target"
+    # collector 0 'crashed' between claims and pushes: BOTH of its
+    # in-flight tickets come back in one refund, exactly once
+    assert ds.refund_inflight(0) == 2
+    assert ds.refund_inflight(0) == 0, "double refund must be a no-op"
+    assert ds.try_claim(1) == 1
     ds.push({"x": np.zeros(1, np.float32)}, collector_id=1)
-    assert ds.refund_inflight(1) is False, \
-        "a completed push clears the in-flight flag"
+    assert ds.refund_inflight(1) == 1, \
+        "one of collector 1's two tickets is still unfilled"
+    assert ds.refund_inflight(1) == 0
+
+
+def test_proc_data_server_batch_claims_and_push():
+    """ISSUE 6 farm accounting: try_claim(k) grants partial batches at
+    the end of the target, push_batch settles the whole grant in one
+    queue item, and drain unpacks it into per-trajectory dicts."""
+    import multiprocessing as mp
+    ds = ProcDataServer(mp.get_context("spawn"), n_collectors=2, target=7)
+    assert ds.try_claim(0, k=4) == 4
+    assert ds.try_claim(1, k=4) == 3, "partial grant at the target edge"
+    assert ds.try_claim(0, k=4) == 0, "target exhausted"
+    batch = {"x": np.arange(8, dtype=np.float32).reshape(4, 2)}
+    ds.push_batch(batch, 4, collector_id=0)
+    assert ds.total_pushed == 4
+    assert ds.refund_inflight(0) == 0, "push_batch settled the grant"
+    assert ds.refund_inflight(1) == 3
+    got = []
+    deadline = time.monotonic() + 30
+    while len(got) < 4 and time.monotonic() < deadline:
+        got.extend(ds.drain())
+        time.sleep(0.01)
+    assert [float(t["x"][0]) for t in got] == [0.0, 2.0, 4.0, 6.0]
+    assert got[0]["x"].shape == (2,), "drain yields per-traj rows"
 
 
 def _fleet_producer(ds, cid, n_items, start_evt, hang_evt=None):
@@ -260,7 +286,7 @@ def test_proc_data_server_multi_producer_exact_under_kill():
     victim.join(30)
     assert victim.exitcode != 0
     assert ds.total_pushed == 2
-    assert ds.refund_inflight(2) is True, \
+    assert ds.refund_inflight(2) == 1, \
         "killed-mid-claim producer must leave a refundable ticket"
     # 3 fresh concurrent producers (incl. the victim's replacement)
     # race for the remaining tickets
@@ -279,7 +305,73 @@ def test_proc_data_server_multi_producer_exact_under_kill():
     assert ds.total_pushed == target, \
         f"global count not exact: {ds.total_pushed} != {target}"
     assert len(drained) == target, len(drained)
-    assert not ds.try_claim(0), "tickets must stay exhausted"
+    assert ds.try_claim(0) == 0, "tickets must stay exhausted"
+
+
+def _farm_producer(ds, cid, batch, start_evt, hang_evt=None):
+    """Batched producer (module-level for spawn pickling): claims up to
+    ``batch`` tickets per step and pushes the granted batch whole. With
+    ``hang_evt`` it pushes ONE lane of its first grant, then hangs still
+    holding the rest — the mid-batch crash shape."""
+    start_evt.wait(30)
+    while True:
+        g = ds.try_claim(cid, k=batch)
+        if not g:
+            break
+        if hang_evt is not None:
+            ds.push({"x": np.full((3,), cid, np.float32)},
+                    collector_id=cid)
+            hang_evt.set()
+            time.sleep(300)      # SIGKILLed here, holding g - 1 tickets
+        ds.push_batch({"x": np.full((g, 3), cid, np.float32)}, g,
+                      collector_id=cid)
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(300)
+def test_proc_data_server_exact_under_mid_batch_kill():
+    """ISSUE 6 acceptance: a farm collector SIGKILLed MID-BATCH (one
+    lane pushed, the rest of its grant in flight) leaves exactly the
+    unfilled remainder refundable, and the global criterion still lands
+    exactly even though the batch size does not divide the target."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    target, batch = 8, 3                      # 3 does not divide 8
+    ds = ProcDataServer(ctx, n_collectors=2, target=target)
+    start = ctx.Event()
+    hang = ctx.Event()
+    victim = ctx.Process(target=_farm_producer,
+                         args=(ds, 0, batch, start, hang), daemon=True)
+    victim.start()
+    start.set()
+    assert hang.wait(60), "victim never reached its hang point"
+    drained = []
+    deadline = time.monotonic() + 60
+    while len(drained) < 1 and time.monotonic() < deadline:
+        drained.extend(ds.drain())
+        time.sleep(0.01)
+    assert len(drained) == 1, "victim's single lane never arrived"
+    os.kill(victim.pid, signal.SIGKILL)
+    victim.join(30)
+    assert ds.total_pushed == 1
+    assert ds.refund_inflight(0) == batch - 1, \
+        "the unfilled remainder of the batch must come back"
+    # a replacement farm races the surviving slot for the remaining 7
+    procs = [ctx.Process(target=_farm_producer,
+                         args=(ds, cid, batch, start), daemon=True)
+             for cid in range(2)]
+    for p in procs:
+        p.start()
+    for p in procs:
+        p.join(120)
+    deadline = time.monotonic() + 60
+    while len(drained) < target and time.monotonic() < deadline:
+        drained.extend(ds.drain())
+        time.sleep(0.01)
+    assert ds.total_pushed == target, \
+        f"global count not exact: {ds.total_pushed} != {target}"
+    assert len(drained) == target, len(drained)
+    assert ds.try_claim(0, k=batch) == 0, "tickets must stay exhausted"
 
 
 def test_procs_mode_requires_plain_configs():
@@ -336,16 +428,19 @@ def test_procs_and_threads_runs_same_seed_both_train(tmp_path):
 @pytest.mark.slow
 @pytest.mark.timeout(900)
 def test_procs_fleet_of_four_completes_criterion_exact(tmp_path):
-    """ISSUE 5 acceptance: AsyncTrainer(n_collectors=4) in procs mode —
-    four collector processes plus model/policy — completes with the
-    global trajectory criterion landing EXACTLY, per-collector restart
+    """ISSUE 5 acceptance (+ ISSUE 6 farm): AsyncTrainer(n_collectors=4,
+    envs_per_collector=2) in procs mode — four farm-collector processes
+    plus model/policy — completes with the global trajectory criterion
+    landing EXACTLY even though the batch size does not divide it
+    (someone runs the partial-batch variant), per-collector restart
     accounting in place, and a heterogeneous exploration ladder."""
     env = make_env("pendulum")
     ens, pol, acfg = small_cfgs(env)
-    rc = RunConfig(total_trajs=8, seed=SEED, min_warmup_trajs=2,
+    rc = RunConfig(total_trajs=9, seed=SEED, min_warmup_trajs=2,
                    eval_every_policy_steps=2, snapshot_every_s=2.0,
                    ckpt_dir=str(tmp_path / "ckpt"),
                    collect_noise=(1.0, 0.75, 1.25, 1.5),
+                   envs_per_collector=2,
                    min_final_model_version=1, min_final_policy_version=2)
     tr = AsyncTrainer(env, ens, None, rc, mode="procs",
                       algo_cfg=acfg, pol_cfg=pol, n_collectors=4)
