@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-mesh test-procs lint bench bench-hotpath bench-hotpath-sharded
+.PHONY: test test-mesh test-procs lint bench bench-hotpath bench-hotpath-sharded soak soak-long
 
 # Default aggregate = the multi-device mesh suite FIRST, then the tier-1
 # verify verbatim from ROADMAP.md. The mesh suite must run as its own
@@ -46,3 +46,20 @@ bench-hotpath:
 # Same gate + the role-sharded measurement (8-device subprocess).
 bench-hotpath-sharded:
 	python -m benchmarks.hotpath --check --sharded
+
+# Chaos soak (PR 7): seeded fault injection (SIGKILLs, stalls, delayed
+# respawns across every role) against the procs engine while the
+# invariant monitor checks the PR 1-6 contracts live and the resource
+# auditor proves zero leaked shm/fds/processes. `soak` = the short PR-CI
+# profile (>= 10 faults spanning all three roles, a few minutes);
+# `soak-long` = the scheduled-job profile (set SOAK_DURATION=<seconds>
+# to keep launching seeded runs for that long). Both write
+# SOAK_report.json; see README "Soak & chaos".
+soak:
+	python -m repro.chaos.soak --profile short --seed 0 \
+		--out SOAK_report.json
+
+soak-long:
+	python -m repro.chaos.soak --profile long --seed 0 \
+		$(if $(SOAK_DURATION),--duration $(SOAK_DURATION)) \
+		--out SOAK_report.json

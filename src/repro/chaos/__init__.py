@@ -1,0 +1,42 @@
+"""Chaos engine + soak harness (PR 7).
+
+The paper's claim — async MBRL keeps learning while the real world keeps
+moving — only holds in production if the trainer survives crashes,
+stalls, and slow consumers WITHOUT violating any PR 1-6 invariant. This
+package turns that into a continuously-checked property:
+
+* :mod:`repro.chaos.faults` — ``FaultPlan`` (deterministic, seeded fault
+  schedules: SIGKILLs across every role incl. fleet collectors,
+  SIGSTOP/SIGCONT stalls that saturate the queue / slow consumers,
+  delayed respawns) and ``ChaosSupervisor``, which injects the plan
+  through the :class:`repro.core.runtime.Supervisor` seam.
+* :mod:`repro.chaos.monitor` — ``InvariantMonitor``: always-on checks
+  DURING the run (exact criterion with refunds, strictly monotone
+  versions across restarts, zero retraces after warmup, bounded restart
+  budgets).
+* :mod:`repro.chaos.audit` — ``ResourceAuditor``: proves zero leaked
+  shm segments / fds / child processes after clean AND chaotic
+  shutdown (sweeps ``/dev/shm`` + ``/proc/self/fd`` deltas and the
+  server audit registries).
+* :mod:`repro.chaos.soak` — ``python -m repro.chaos.soak`` CLI tying it
+  together; profiles for PR CI (``short``) and scheduled jobs
+  (``long``); machine-readable ``SOAK_report.json``.
+"""
+from repro.chaos.audit import ResourceAuditor
+from repro.chaos.faults import KILL, STALL, ChaosSupervisor, FaultEvent, \
+    FaultPlan
+from repro.chaos.monitor import InvariantMonitor
+
+__all__ = ["ChaosSupervisor", "FaultEvent", "FaultPlan",
+           "InvariantMonitor", "KILL", "PROFILES", "ResourceAuditor",
+           "STALL", "run_soak"]
+
+
+def __getattr__(name):
+    # soak imports lazily: `python -m repro.chaos.soak` first imports
+    # this package, and an eager soak import there would double-import
+    # the __main__ module (runpy's RuntimeWarning)
+    if name in ("PROFILES", "run_soak"):
+        from repro.chaos import soak
+        return getattr(soak, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,170 @@
+"""Resource auditing: prove a procs run leaks NOTHING (PR 7).
+
+A crashed child, a torn-down queue, or a GC-order-dependent ``close``
+can each strand a kernel resource that survives the run: a named shm
+segment in ``/dev/shm``, a pipe/socket fd in the parent, an orphaned
+child process. Over an hours-long soak those leaks compound into ENOSPC
+/ EMFILE / pid exhaustion — so the soak harness treats ONE leaked
+resource as a failure.
+
+:class:`ResourceAuditor` snapshots the parent's observable resources
+before the run (``baseline()``) and diffs after (``audit()``):
+
+* ``/dev/shm`` entries (named segments: ``ShmParameterServer`` payloads
+  and anything else a run creates);
+* ``/proc/self/fd`` targets, filtered to leakable kinds (``pipe:``,
+  ``socket:``, ``/dev/shm/...``, memfds) — kernel object ids are
+  unique, so a NEW pipe id still present after teardown is a leak even
+  if the fd number was reused;
+* direct children from ``/proc/*/stat`` ppid scans, excluding
+  multiprocessing's long-lived ``resource_tracker`` (it legitimately
+  persists for the parent's lifetime);
+* the in-process audit registries
+  (``servers.live_shm_segments`` / ``servers.live_data_servers``) — a
+  server constructed but never closed is a leak even before the kernel
+  notices.
+
+``audit(settle_s=...)`` polls until clean or the settle window expires:
+queue feeder threads and the resource tracker unlink asynchronously, so
+an immediate diff would flag transients.
+"""
+from __future__ import annotations
+
+import gc
+import os
+import time
+from typing import Any, Dict, Set
+
+from repro.core.servers import live_data_servers, live_shm_segments
+
+# fd targets that indicate an IPC resource we could have leaked; other
+# kinds (files, ttys, eventfds jax opens lazily) are process-lifetime
+# caches, not per-run leaks
+_LEAKABLE_FD_PREFIXES = ("pipe:", "socket:", "/dev/shm", "/memfd:")
+
+
+def _shm_entries() -> Set[str]:
+    try:
+        return set(os.listdir("/dev/shm"))
+    except OSError:
+        return set()
+
+
+def _fd_targets() -> Dict[int, str]:
+    out: Dict[int, str] = {}
+    try:
+        fds = os.listdir("/proc/self/fd")
+    except OSError:
+        return out
+    for fd in fds:
+        try:
+            out[int(fd)] = os.readlink(f"/proc/self/fd/{fd}")
+        except OSError:     # the listing fd itself, or a racing close
+            pass
+    return out
+
+
+def _child_procs() -> Dict[int, str]:
+    """pid -> cmdline for every direct child of this process."""
+    me = os.getpid()
+    out: Dict[int, str] = {}
+    try:
+        entries = os.listdir("/proc")
+    except OSError:
+        return out
+    for name in entries:
+        if not name.isdigit():
+            continue
+        try:
+            with open(f"/proc/{name}/stat") as f:
+                stat = f.read()
+            # field 4 is ppid; comm (field 2) may contain spaces, so
+            # split AFTER the closing paren
+            ppid = int(stat.rsplit(")", 1)[1].split()[1])
+        except (OSError, ValueError, IndexError):
+            continue
+        if ppid != me:
+            continue
+        try:
+            with open(f"/proc/{name}/cmdline") as f:
+                cmd = f.read().replace("\0", " ").strip()
+        except OSError:
+            cmd = "?"
+        out[int(name)] = cmd
+    return out
+
+
+def _is_tracker(cmd: str) -> bool:
+    return "resource_tracker" in cmd or "semaphore_tracker" in cmd
+
+
+def warmup_ipc() -> None:
+    """Force multiprocessing's lazy PROCESS-LIFETIME allocations — the
+    shared-heap arena mmap backing ``Value``/``Array`` (two fds on
+    ``/dev/shm/pym-*``) and the resource-tracker child plus its pipe —
+    so they exist before ``baseline()`` and never read as run leaks.
+    Idempotent, cheap, spawns no worker."""
+    import multiprocessing as mp
+    ctx = mp.get_context("spawn")
+    v = ctx.Value("q", 0)
+    a = ctx.Array("d", 2, lock=False)
+    ev = ctx.Event()
+    q = ctx.Queue()
+    q.close()
+    q.join_thread()
+    del v, a, ev, q
+    gc.collect()
+
+
+class ResourceAuditor:
+    def __init__(self):
+        self.before: Dict[str, Any] = {}
+
+    @staticmethod
+    def snapshot() -> Dict[str, Any]:
+        return {"shm": _shm_entries(), "fds": _fd_targets(),
+                "children": _child_procs()}
+
+    def baseline(self) -> Dict[str, Any]:
+        """Take the pre-run snapshot. Call AFTER jax and multiprocessing
+        have warmed up (first device op, first spawned child) so their
+        lazily-opened process-lifetime fds don't read as run leaks."""
+        self.before = self.snapshot()
+        return self.before
+
+    def audit(self, *, settle_s: float = 3.0) -> Dict[str, Any]:
+        """Diff now against the baseline; re-check until clean or the
+        settle window expires (feeder threads / the resource tracker
+        reclaim asynchronously after close)."""
+        assert self.before, "call baseline() before audit()"
+        deadline = time.monotonic() + float(settle_s)
+        while True:
+            # sweep harness-side reference cycles first: an mp lock or
+            # queue kept alive only by an uncollected cycle is pending
+            # reclamation, not leaked
+            gc.collect()
+            report = self._diff(self.snapshot())
+            if report["ok"] or time.monotonic() >= deadline:
+                return report
+            time.sleep(0.1)
+
+    def _diff(self, after: Dict[str, Any]) -> Dict[str, Any]:
+        b = self.before
+        leaked_shm = sorted(after["shm"] - b["shm"])
+        before_targets = set(b["fds"].values())
+        leaked_fds = sorted(
+            f"fd {fd} -> {tgt}" for fd, tgt in after["fds"].items()
+            if tgt not in before_targets
+            and tgt.startswith(_LEAKABLE_FD_PREFIXES))
+        leaked_children = {
+            str(pid): cmd for pid, cmd in after["children"].items()
+            if pid not in b["children"] and not _is_tracker(cmd)}
+        registries = {"shm_segments": list(live_shm_segments()),
+                      "data_servers": int(live_data_servers())}
+        ok = not (leaked_shm or leaked_fds or leaked_children
+                  or registries["shm_segments"]
+                  or registries["data_servers"])
+        return {"ok": ok, "leaked_shm": leaked_shm,
+                "leaked_fds": leaked_fds,
+                "leaked_children": leaked_children,
+                "registries": registries}

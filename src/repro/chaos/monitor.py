@@ -1,0 +1,149 @@
+"""Always-on invariant monitoring DURING a procs-mode run (PR 7).
+
+Every invariant the repo's tests check post-hoc is verified here while
+the run is live, from the parent's supervision loop, via the
+:class:`repro.core.runtime.Supervisor` seam:
+
+* **Exact criterion** — ``total_pushed`` never exceeds ``total_trajs``
+  mid-run (refund accounting can't overshoot), and lands EXACTLY on it
+  at completion (crash refunds can't undershoot).
+* **Monotone versions** — the shm version words of both parameter
+  stores only ever increase, including across child crash-restarts
+  (the version word lives IN shm precisely so a restarted writer
+  continues the sequence instead of resetting it).
+* **Zero retraces after warmup** — children publish their jit
+  compile counts through the heartbeat array
+  (``workers.compile_count`` / ``utils.jit_stats``); each role has a
+  hard per-process cap (model 1, policy 1, collector 1 — or 2 with an
+  env farm, whose final partial grant may touch the single-rollout
+  program). Exceeding the cap means the hot path retraced.
+* **Bounded restarts** — per-role crash counts never exceed
+  ``max_restarts`` (the supervisor raises at >, so observing it here
+  means the budget check itself broke).
+
+Violations accumulate as strings in ``.violations`` — empty at the end
+of a chaotic run is the soak harness's core pass criterion.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List
+
+from repro.core.runtime import Supervisor
+from repro.core.workers import heartbeat_slot
+
+
+class InvariantMonitor(Supervisor):
+    def __init__(self, *, check_every_s: float = 0.05):
+        self.check_every_s = float(check_every_s)
+        self.violations: List[str] = []
+        self.stats: Dict[str, Any] = {}
+
+    def attach(self, trainer) -> None:
+        super().attach(trainer)
+        rc = trainer.run_cfg
+        self._collector_cap = 1 if rc.envs_per_collector == 1 else 2
+        self._seen_versions = {"model": 0, "policy": 0}
+        self._next_check = 0.0
+        self.stats = {"ticks": 0, "checks": 0, "child_exits": [],
+                      "max_compiles": {}, "max_versions": {},
+                      "final": {}}
+
+    # ----------------------------------------------------------- seam
+    def on_tick(self) -> None:
+        self.stats["ticks"] += 1
+        now = time.monotonic()
+        if now < self._next_check:
+            return
+        self._next_check = now + self.check_every_s
+        self.stats["checks"] += 1
+        self._check_versions()
+        self._check_criterion_bound()
+        self._check_budgets()
+        self._check_compiles()
+
+    def on_child_exit(self, role, exitcode, n_restarts) -> None:
+        self.stats["child_exits"].append(
+            {"role": role, "exitcode": int(exitcode),
+             "n_restarts": int(n_restarts)})
+
+    def on_complete(self) -> None:
+        """Completion-time checks: the criterion must land EXACTLY (the
+        refund accounting's whole point) and nothing may still be in
+        flight."""
+        tr = self.trainer
+        rc = tr.run_cfg
+        data = tr._proc_servers["data"]
+        pushed = data.total_pushed
+        if pushed != rc.total_trajs:
+            self._violate(
+                f"criterion missed: run completed with total_pushed="
+                f"{pushed}, expected exactly {rc.total_trajs}")
+        self._check_versions()
+        self._check_compiles()
+        self.stats["final"] = {
+            "total_pushed": int(pushed),
+            "model_version": int(tr._proc_servers["model"].version),
+            "policy_version": int(tr._proc_servers["policy"].version),
+            "restarts": dict(tr.proc_info["restarts"])}
+
+    # -------------------------------------------------------- checks
+    def _violate(self, msg: str) -> None:
+        if msg not in self.violations:
+            self.violations.append(msg)
+
+    def _check_versions(self) -> None:
+        srv = self.trainer._proc_servers
+        for name in ("model", "policy"):
+            v = int(srv[name].version)
+            seen = self._seen_versions[name]
+            if v < seen:
+                self._violate(
+                    f"{name} version went BACKWARDS: {seen} -> {v} "
+                    "(restart must republish at a version >= the "
+                    "snapshot's, never reset the shm version word)")
+            self._seen_versions[name] = max(v, seen)
+            self.stats["max_versions"][name] = self._seen_versions[name]
+
+    def _check_criterion_bound(self) -> None:
+        tr = self.trainer
+        pushed = tr._proc_servers["data"].total_pushed
+        if pushed > tr.run_cfg.total_trajs:
+            self._violate(
+                f"criterion OVERSHOT mid-run: total_pushed={pushed} > "
+                f"total_trajs={tr.run_cfg.total_trajs} (ticket claims / "
+                "crash refunds let extra trajectories through)")
+
+    def _check_budgets(self) -> None:
+        rc = self.trainer.run_cfg
+        for role, n in self.trainer.proc_info["restarts"].items():
+            if n > rc.max_restarts:
+                self._violate(
+                    f"restart budget exceeded silently: {role} at "
+                    f"{n} > max_restarts={rc.max_restarts} without the "
+                    "supervisor failing the run")
+
+    def _check_compiles(self) -> None:
+        tr = self.trainer
+        rc = tr.run_cfg
+        ch = tr._proc_channels
+        for role in tr.proc_info["restarts"]:
+            cap = (self._collector_cap if role.startswith("collector")
+                   else 1)
+            slot = heartbeat_slot(role, rc.n_collectors)
+            _beat, compiles = ch.read_heartbeat(slot)
+            c = int(compiles)
+            if c < 0:
+                continue    # jax hid the cache: unknown, not a violation
+            seen = self.stats["max_compiles"].get(role, 0)
+            self.stats["max_compiles"][role] = max(seen, c)
+            if c > cap:
+                self._violate(
+                    f"{role} RETRACED after warmup: compile count {c} > "
+                    f"cap {cap} (PR 1 compile-once invariant broken in "
+                    "the child's hot path)")
+
+    # ---------------------------------------------------------- report
+    def report(self) -> Dict[str, Any]:
+        return {"violations": list(self.violations),
+                "stats": dict(self.stats)}

@@ -2,7 +2,17 @@
 
 Layout: <dir>/step_<N>/arrays.npz + tree.json (structure + dtypes).
 Works for params, optimizer states, MBRL worker states — anything made of
-array leaves. Atomic via tmp-dir rename; keeps the last ``keep`` steps.
+array leaves. Keeps the last ``keep`` steps.
+
+Crash-atomic (chaos invariant, PR 7): every snapshot is written to a
+``.tmp`` sibling first — file contents flushed AND fsynced, then the
+directory atomically renamed over the target, then the parent directory
+fsynced — so a writer SIGKILLed at ANY instruction can only ever leave
+(a) the previous complete snapshot plus (b) an ignorable ``.tmp``
+leftover. ``latest_step``/``restore`` only accept exact ``step_<N>``
+names, and ``restore`` falls back to the NEWEST snapshot that actually
+loads, skipping truncated/corrupt ones — a supervisor killed
+mid-snapshot can never poison a restart.
 
 The flat-key codec (flatten -> per-leaf storable dtype view -> restore)
 is exposed as ``flat_codec`` so other fixed-structure array transports
@@ -14,15 +24,17 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 from pathlib import Path
-from typing import Optional
+from typing import List, Optional
 
 import jax
 import ml_dtypes
 import numpy as np
 
 _SEP = "/"
+_STEP_RE = re.compile(r"step_(\d+)$")
 
 # numpy's savez can't round-trip ml_dtypes (bfloat16 etc.); store them as
 # same-width unsigned ints and view back on load.
@@ -84,8 +96,35 @@ class LeafCodec:
         return jax.tree.unflatten(self.treedef, leaves)
 
 
+def _fsync_file(f) -> None:
+    f.flush()
+    os.fsync(f.fileno())
+
+
+def _fsync_dir(path) -> None:
+    # a rename is only durable once the containing directory's entry is
+    # on disk; some filesystems reject O_RDONLY fsync — best effort there
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save_pytree(path, tree, *, step: Optional[int] = None, keep: int = 3):
-    """Save under path/step_<N> (or path directly if step is None)."""
+    """Save under path/step_<N> (or path directly if step is None).
+
+    Crash-atomic: contents land in ``<target>.tmp`` (each file flushed +
+    fsynced), the tmp dir is renamed over the target in one atomic
+    ``os.replace``, and the parent directory is fsynced — a writer
+    killed mid-snapshot leaves only an ignorable ``.tmp`` leftover,
+    never a truncated ``step_<N>``. Stale ``.tmp`` leftovers from
+    previous crashes are swept on the next save."""
     base = Path(path)
     target = base / f"step_{step:09d}" if step is not None else base
     tmp = target.with_name(target.name + ".tmp")
@@ -94,20 +133,29 @@ def save_pytree(path, tree, *, step: Optional[int] = None, keep: int = 3):
     tmp.mkdir(parents=True)
     flat, treedef = _flatten(tree)
     arrays = {f"a{i}": _to_storable(x) for i, x in enumerate(flat)}
-    np.savez(tmp / "arrays.npz", **arrays)
-    (tmp / "tree.json").write_text(json.dumps({
-        "treedef": str(treedef),
-        "n": len(flat),
-        "dtypes": [str(np.asarray(x).dtype) for x in flat],
-        "shapes": [list(np.asarray(x).shape) for x in flat],
-    }))
+    with open(tmp / "arrays.npz", "wb") as f:
+        np.savez(f, **arrays)
+        _fsync_file(f)
+    with open(tmp / "tree.json", "w") as f:
+        f.write(json.dumps({
+            "treedef": str(treedef),
+            "n": len(flat),
+            "dtypes": [str(np.asarray(x).dtype) for x in flat],
+            "shapes": [list(np.asarray(x).shape) for x in flat],
+        }))
+        _fsync_file(f)
     if target.exists():
         shutil.rmtree(target)
     os.replace(tmp, target)
+    _fsync_dir(target.parent)
     if step is not None and keep:
-        steps = sorted(p for p in base.glob("step_*") if p.is_dir())
-        for old in steps[:-keep]:
-            shutil.rmtree(old)
+        for old in _step_dirs(base)[:-keep]:
+            shutil.rmtree(base / f"step_{old:09d}")
+        # crashed writers leave orphaned .tmp dirs; sweep any that are
+        # not the snapshot we just renamed away
+        for leftover in base.glob("step_*.tmp"):
+            if leftover.is_dir():
+                shutil.rmtree(leftover, ignore_errors=True)
     return target
 
 
@@ -129,15 +177,43 @@ def load_pytree(path, like):
     return jax.tree.unflatten(treedef, out)
 
 
+def _step_dirs(base: Path) -> List[int]:
+    """Step numbers of EXACT ``step_<N>`` directories, ascending.
+    ``.tmp`` leftovers and other stragglers never match (a leftover
+    ``step_000000002.tmp`` used to crash the int parse here)."""
+    steps = []
+    for p in base.glob("step_*"):
+        m = _STEP_RE.fullmatch(p.name)
+        if m and p.is_dir():
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
 def latest_step(path) -> Optional[int]:
-    base = Path(path)
-    steps = sorted(int(p.name.split("_")[1]) for p in base.glob("step_*")
-                   if p.is_dir())
+    steps = _step_dirs(Path(path))
     return steps[-1] if steps else None
 
 
 def restore(path, like):
-    """Load the newest step_<N> under path (or path itself)."""
-    step = latest_step(path)
-    target = Path(path) / f"step_{step:09d}" if step is not None else path
-    return load_pytree(target, like), step
+    """Load the newest step_<N> under path (or path itself).
+
+    Robust to a supervisor killed mid-snapshot: candidate steps are
+    tried NEWEST FIRST and any that fail to load (truncated arrays.npz,
+    missing/garbled tree.json — only possible for snapshots written by
+    pre-atomic writers or torn by the filesystem) are skipped, so a
+    restart lands on the latest COMPLETE checkpoint instead of dying on
+    a corrupt one. Raises only when no complete snapshot exists at all.
+    """
+    base = Path(path)
+    steps = _step_dirs(base)
+    if not steps:
+        return load_pytree(base, like), None
+    last_err: Optional[Exception] = None
+    for step in reversed(steps):
+        try:
+            return load_pytree(base / f"step_{step:09d}", like), step
+        except Exception as e:        # truncated/corrupt: try the older one
+            last_err = e
+    raise FileNotFoundError(
+        f"no complete checkpoint under {base} "
+        f"(all of steps {steps} failed to load)") from last_err

@@ -2,12 +2,16 @@ from repro.core.clock import RealClock, VirtualClock
 from repro.core.roles import RoleSplit, split_roles
 from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
-                                SequentialTrainer, clear_eval_cache)
+                                SequentialTrainer, Supervisor,
+                                SupervisorChain, clear_eval_cache)
 from repro.core.servers import (BackpressureError, DataServer, LocalBuffer,
                                 ParameterServer, ProcDataServer,
-                                ReplayBuffer, ShmParameterServer)
+                                ReplayBuffer, ShmParameterServer,
+                                live_data_servers, live_shm_segments,
+                                reclaim_ipc_resources)
 from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
                                 ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,
                                 ProcSpec, clear_rollout_cache,
+                                heartbeat_slot, heartbeat_slots,
                                 proc_worker_main)

@@ -37,6 +37,7 @@ import queue as _queue
 import tempfile
 import threading
 import time
+from contextlib import ExitStack
 from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional
 
@@ -50,7 +51,8 @@ from repro.core.servers import (DataServer, ParameterServer, ProcDataServer,
 from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
                                 ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,
-                                ProcSpec, default_burst, proc_worker_main)
+                                ProcSpec, default_burst, heartbeat_slots,
+                                proc_worker_main)
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
 
@@ -162,6 +164,123 @@ class _Recorder:
         return ret
 
 
+class Supervisor:
+    """Hook seam into ``AsyncTrainer(mode="procs")`` supervision (PR 7).
+
+    The parent's supervision loop calls these at well-defined points; the
+    default implementation is a no-op, so plugging one in changes NOTHING
+    about a healthy run. ``repro.chaos`` builds its fault-injection engine
+    and always-on invariant monitor entirely on this seam — the trainer
+    itself knows nothing about chaos.
+
+    Lifecycle (all calls happen in the PARENT process):
+
+    * ``attach(trainer)``      once, before any child is spawned.
+    * ``on_spawn(role, proc, resume)``  after every child start
+      (initial spawns and crash-restarts alike).
+    * ``on_tick()``            every supervision-loop iteration (~50 Hz);
+      the place to inject faults and check invariants DURING the run.
+    * ``on_child_exit(role, exitcode, n_restarts)``  when the parent
+      detects a dead child, BEFORE the budget check — fires even for the
+      crash that exhausts the budget.
+    * ``respawn_delay(role) -> float``  seconds to delay that role's
+      crash-restart (0 = immediate, the pre-PR-7 behaviour). While
+      delayed, the dead child stays visible in ``trainer._procs``.
+    * ``on_snapshot(step)``    after every parent checkpoint attempt.
+    * ``on_complete()``        when the stopping criterion is reached
+      cleanly, before learner shutdown — last chance to un-stall
+      children (SIGCONT) so the clean joins can proceed.
+    * ``on_teardown(procs)``   FIRST thing in the teardown path, clean or
+      not — must leave every child in a joinable state.
+    """
+
+    trainer: Any = None
+
+    def attach(self, trainer) -> None:
+        self.trainer = trainer
+
+    def detach(self) -> None:
+        """Drop the trainer reference. The trainer calls this LAST in
+        its teardown: ``attach`` makes trainer<->supervisor a reference
+        cycle, and breaking it lets refcounting free every mp primitive
+        (locks, events, semaphore names in /dev/shm) the moment the
+        caller releases the trainer — the ResourceAuditor's
+        guaranteed-reclaim contract — instead of whenever the cycle
+        collector next runs."""
+        self.trainer = None
+
+    def on_spawn(self, role: str, proc, resume: bool) -> None:
+        pass
+
+    def on_tick(self) -> None:
+        pass
+
+    def on_child_exit(self, role: str, exitcode: int,
+                      n_restarts: int) -> None:
+        pass
+
+    def respawn_delay(self, role: str) -> float:
+        return 0.0
+
+    def on_snapshot(self, step: int) -> None:
+        pass
+
+    def on_complete(self) -> None:
+        pass
+
+    def on_teardown(self, procs: Dict[str, Any]) -> None:
+        pass
+
+
+class SupervisorChain(Supervisor):
+    """Fan one supervision seam out to several supervisors (e.g. a chaos
+    injector plus an invariant monitor). Hooks are called in order;
+    ``respawn_delay`` is the MAX across members (the most patient member
+    wins — a delayed respawn is the riskier schedule, which is what a
+    chaos run wants to exercise)."""
+
+    def __init__(self, *members: Supervisor):
+        self.members = list(members)
+
+    def attach(self, trainer) -> None:
+        self.trainer = trainer
+        for m in self.members:
+            m.attach(trainer)
+
+    def detach(self) -> None:
+        self.trainer = None
+        for m in self.members:
+            m.detach()
+
+    def on_spawn(self, role, proc, resume) -> None:
+        for m in self.members:
+            m.on_spawn(role, proc, resume)
+
+    def on_tick(self) -> None:
+        for m in self.members:
+            m.on_tick()
+
+    def on_child_exit(self, role, exitcode, n_restarts) -> None:
+        for m in self.members:
+            m.on_child_exit(role, exitcode, n_restarts)
+
+    def respawn_delay(self, role) -> float:
+        return max([m.respawn_delay(role) for m in self.members],
+                   default=0.0)
+
+    def on_snapshot(self, step) -> None:
+        for m in self.members:
+            m.on_snapshot(step)
+
+    def on_complete(self) -> None:
+        for m in self.members:
+            m.on_complete()
+
+    def on_teardown(self, procs) -> None:
+        for m in self.members:
+            m.on_teardown(procs)
+
+
 class AsyncTrainer:
     def __init__(self, env, ens_cfg: DYN.EnsembleConfig, algo,
                  run_cfg: Optional[RunConfig] = None, *,
@@ -171,7 +290,8 @@ class AsyncTrainer:
                  algo_cfg=None, pol_cfg=None,
                  n_collectors: Optional[int] = None,
                  envs_per_collector: Optional[int] = None,
-                 exploration: Optional[ExplorationSchedule] = None):
+                 exploration: Optional[ExplorationSchedule] = None,
+                 supervisor: Optional[Supervisor] = None):
         """``mesh``/``roles``: run each worker against its own role
         sub-mesh (core/roles.py). Pass a ``roles`` RoleSplit directly, or
         a ``mesh`` to split by ``role_ratios`` along ``role_axis``.
@@ -195,7 +315,16 @@ class AsyncTrainer:
         (plain-config AlgoConfig/PolicyConfig): spawned children cannot
         unpickle a built algo (it closes over jitted callables) — they
         rebuild it from configs. ``algo=None`` is then allowed and built
-        here the same way (make_algo)."""
+        here the same way (make_algo).
+
+        ``supervisor``: a :class:`Supervisor` hooked into the procs-mode
+        supervision loop (fault injection, invariant monitoring — see
+        ``repro.chaos``). Procs-mode only."""
+        if supervisor is not None and mode != "procs":
+            raise ValueError(
+                f'supervisor= hooks into the mode="procs" supervision '
+                f"loop only (got mode={mode!r})")
+        self.supervisor = supervisor
         if mode == "procs":
             if algo_cfg is None or pol_cfg is None:
                 raise ValueError(
@@ -457,83 +586,128 @@ class AsyncTrainer:
     def _run_procs(self):
         import multiprocessing as mp
         rc = self.run_cfg
+        sup = self.supervisor if self.supervisor is not None else Supervisor()
         ctx = mp.get_context("spawn")   # NEVER fork: the parent's jax
         #                                 runtime must not leak into
         #                                 children (fork corrupts XLA)
         ckpt_dir = Path(rc.ckpt_dir) if rc.ckpt_dir else \
             Path(tempfile.mkdtemp(prefix="repro_procs_ckpt_"))
-        model_srv = ShmParameterServer(self.model_worker.params)
-        policy_srv = ShmParameterServer(self.policy_worker.state["policy"])
-        # ticket-armed: N collector processes claim collection slots from
-        # the shared server, so the global criterion lands exactly even
-        # across collector crashes (the parent refunds in-flight tickets)
-        data_srv = ProcDataServer(ctx, n_collectors=rc.n_collectors,
-                                  target=rc.total_trajs,
-                                  push_timeout=rc.push_timeout_s)
-        trace_q = ctx.Queue()
-        stop = ctx.Event()
-        ch = ProcChannels(model_srv, policy_srv, data_srv, trace_q, stop,
-                          t0=time.monotonic())
-        spec = ProcSpec(self.env, self.ens_cfg, self.algo_cfg, self.pol_cfg,
-                        rc, rc.seed, exploration=self.exploration)
-        # exposed for tests/benchmarks: kill-and-restart pokes _procs,
-        # the hotpath bench reads server versions while the run is live
-        self._proc_servers = {"model": model_srv, "policy": policy_srv,
-                              "data": data_srv}
-        self.proc_info: Dict[str, Any] = {"restarts": {}, "ckpt_dir":
-                                          str(ckpt_dir)}
+        # every IPC resource is owned by this ExitStack: whatever path
+        # leaves this method — clean completion, budget RuntimeError, a
+        # KeyboardInterrupt mid-spawn — closes all three servers, so no
+        # teardown relies on GC order (chaos invariant: the
+        # ResourceAuditor sweeps /dev/shm + fds afterwards and must find
+        # zero leaks even after a chaotic run)
+        with ExitStack() as stack:
+            model_srv = stack.enter_context(
+                ShmParameterServer(self.model_worker.params))
+            policy_srv = stack.enter_context(
+                ShmParameterServer(self.policy_worker.state["policy"]))
+            # ticket-armed: N collector processes claim collection slots
+            # from the shared server, so the global criterion lands
+            # exactly even across collector crashes (the parent refunds
+            # in-flight tickets)
+            data_srv = stack.enter_context(
+                ProcDataServer(ctx, n_collectors=rc.n_collectors,
+                               target=rc.total_trajs,
+                               push_timeout=rc.push_timeout_s))
+            trace_q = ctx.Queue()
+            # the trace queue's pipe fds are parent-held IPC too: close
+            # them with the servers, not at GC time
+            stack.callback(trace_q.close)
+            stop = ctx.Event()
+            # lock-free liveness/compile telemetry: one (beat_time,
+            # compile_count) double pair per role slot, written by
+            # children, read by the parent's invariant monitor
+            hb = ctx.Array("d", 2 * heartbeat_slots(rc.n_collectors),
+                           lock=False)
+            ch = ProcChannels(model_srv, policy_srv, data_srv, trace_q,
+                              stop, t0=time.monotonic(), heartbeat=hb)
+            spec = ProcSpec(self.env, self.ens_cfg, self.algo_cfg,
+                            self.pol_cfg, rc, rc.seed,
+                            exploration=self.exploration)
+            # exposed for tests/benchmarks/chaos: kill-and-restart pokes
+            # _procs, the hotpath bench reads server versions while the
+            # run is live, supervisors read channels + restart counters
+            self._proc_servers = {"model": model_srv, "policy": policy_srv,
+                                  "data": data_srv}
+            self._proc_channels = ch
+            # the fleet: one supervised child per collector, each with
+            # its OWN restart budget ("collector:3" crashing repeatedly
+            # must not eat the other collectors' allowance)
+            collector_roles = [f"collector:{i}"
+                               for i in range(rc.n_collectors)]
+            restarts = {r: 0 for r in ["model", "policy"] + collector_roles}
+            # restarts is shared LIVE (not copied) so a supervisor's
+            # on_tick sees budget consumption as it happens
+            self.proc_info: Dict[str, Any] = {
+                "restarts": restarts, "ckpt_dir": str(ckpt_dir)}
 
-        def spawn(role, resume=False):
-            # children must re-import repro whatever launched the parent
-            # (pytest, a notebook, an installed console script)
-            import os
+            def spawn(role, resume=False):
+                # children must re-import repro whatever launched the
+                # parent (pytest, a notebook, an installed script)
+                import os
 
-            import repro
+                import repro
 
-            # namespace package: __file__ is None, __path__ holds the dir
-            pkg_dir = (repro.__file__ and Path(repro.__file__).parent) or \
-                Path(next(iter(repro.__path__)))
-            src_root = str(Path(pkg_dir).resolve().parent)
-            old_pp = os.environ.get("PYTHONPATH")
-            if src_root not in (old_pp or "").split(os.pathsep):
-                os.environ["PYTHONPATH"] = \
-                    src_root + (os.pathsep + old_pp if old_pp else "")
+                # namespace package: __file__ is None, __path__ has dir
+                pkg_dir = (repro.__file__ and Path(repro.__file__).parent) \
+                    or Path(next(iter(repro.__path__)))
+                src_root = str(Path(pkg_dir).resolve().parent)
+                old_pp = os.environ.get("PYTHONPATH")
+                if src_root not in (old_pp or "").split(os.pathsep):
+                    os.environ["PYTHONPATH"] = \
+                        src_root + (os.pathsep + old_pp if old_pp else "")
+                try:
+                    p = ctx.Process(
+                        target=proc_worker_main, name=f"repro-{role}",
+                        args=(role, spec, ch,
+                              str(ckpt_dir) if resume else None),
+                        daemon=True)
+                    p.start()
+                finally:
+                    if old_pp is None:
+                        os.environ.pop("PYTHONPATH", None)
+                    else:
+                        os.environ["PYTHONPATH"] = old_pp
+                sup.on_spawn(role, p, resume)
+                return p
+
+            self._procs = {}
+            # roles whose crash-restart a supervisor delayed: role ->
+            # monotonic deadline. The dead child stays in _procs (its
+            # nonzero exitcode keeps the completion check honest) until
+            # the deadline passes and the respawn actually happens.
+            pending_respawn: Dict[str, float] = {}
+            last_snap = time.monotonic()
+            snap_step = 0
+            sup.attach(self)
             try:
-                p = ctx.Process(
-                    target=proc_worker_main, name=f"repro-{role}",
-                    args=(role, spec, ch, str(ckpt_dir) if resume else None),
-                    daemon=True)
-                p.start()
-            finally:
-                if old_pp is None:
-                    os.environ.pop("PYTHONPATH", None)
-                else:
-                    os.environ["PYTHONPATH"] = old_pp
-            return p
-
-        # the fleet: one supervised child per collector, each with its
-        # OWN restart budget ("collector:3" crashing repeatedly must not
-        # eat the other collectors' allowance)
-        collector_roles = [f"collector:{i}"
-                           for i in range(rc.n_collectors)]
-        restarts = {r: 0 for r in ["model", "policy"] + collector_roles}
-        self._procs = {}
-        last_snap = time.monotonic()
-        snap_step = 0
-        try:
-            for r in ["policy", "model"] + collector_roles:
-                self._procs[r] = spawn(r)
-            while True:
-                self._drain_trace(trace_q)
-                if all(self._procs[r].exitcode == 0
-                       for r in collector_roles) and \
-                        model_srv.version >= rc.min_final_model_version and \
-                        policy_srv.version >= rc.min_final_policy_version:
-                    break           # stopping criterion reached cleanly
-                for role, p in list(self._procs.items()):
-                    ec = p.exitcode
-                    if ec is not None and ec != 0:
+                for r in ["policy", "model"] + collector_roles:
+                    self._procs[r] = spawn(r)
+                while True:
+                    self._drain_trace(trace_q)
+                    sup.on_tick()
+                    if all(self._procs[r].exitcode == 0
+                           for r in collector_roles) and \
+                            model_srv.version >= \
+                            rc.min_final_model_version and \
+                            policy_srv.version >= \
+                            rc.min_final_policy_version:
+                        break       # stopping criterion reached cleanly
+                    for role, p in list(self._procs.items()):
+                        ec = p.exitcode
+                        if ec is None or ec == 0:
+                            continue
+                        if role in pending_respawn:
+                            # crash already accounted; respawn when due
+                            if time.monotonic() < pending_respawn[role]:
+                                continue
+                            del pending_respawn[role]
+                            self._procs[role] = spawn(role, resume=True)
+                            continue
                         restarts[role] += 1
+                        sup.on_child_exit(role, ec, restarts[role])
                         if restarts[role] > rc.max_restarts:
                             raise RuntimeError(
                                 f"{role} worker crashed (exit {ec}) more "
@@ -546,53 +720,80 @@ class AsyncTrainer:
                             data_srv.refund_inflight(
                                 int(role.split(":", 1)[1]))
                         # restart from the LATEST snapshot: the child
-                        # reloads params+versions via checkpoint/io.py
-                        self._procs[role] = spawn(role, resume=True)
-                if time.monotonic() - last_snap >= rc.snapshot_every_s:
-                    snap_step = self._snapshot(ckpt_dir, model_srv,
-                                               policy_srv, snap_step)
-                    last_snap = time.monotonic()
-                time.sleep(0.02)
-            stop.set()
-            for role in ("model", "policy"):
-                self._procs[role].join(timeout=120)
-            # final eval row arrives AFTER the policy child saw stop
-            try:
-                self.recorder.trace.append(trace_q.get(timeout=10))
-            except _queue.Empty:
-                pass
-            self._drain_trace(trace_q)
-            # adopt the children's final published params so the parent
-            # object looks exactly like a threads-mode trainer afterwards
-            m_final, mv = model_srv.pull_host()
-            p_final, pv = policy_srv.pull_host()
-            if p_final is not None:
-                self.policy_worker.state = {
-                    **self.policy_worker.state,
-                    "policy": jax.tree.map(jnp.asarray, p_final)}
-                self.policy_server.push(self.policy_worker.state["policy"])
-            if m_final is not None:
-                self.model_worker.params = jax.tree.map(jnp.asarray, m_final)
-                self.model_server.push(self.model_worker.params)
-            self.collector.collected = data_srv.total_pushed
-            snap_step = self._snapshot(ckpt_dir, model_srv, policy_srv,
-                                       snap_step)
-            self.proc_info.update({
-                "model_version": int(mv), "policy_version": int(pv),
-                "restarts": dict(restarts), "trajs": data_srv.total_pushed,
-                "n_collectors": rc.n_collectors,
-                "noise_scales": [self.exploration.scale_for(i)
-                                 for i in range(rc.n_collectors)]})
-        finally:
-            stop.set()
-            for p in self._procs.values():
-                if p.is_alive():
-                    p.join(timeout=10)
-                if p.is_alive():
-                    p.terminate()
-                    p.join(timeout=5)
-            model_srv.close()
-            policy_srv.close()
+                        # reloads params+versions via checkpoint/io.py —
+                        # immediately, unless a supervisor asks for a
+                        # delayed respawn (chaos: the run must survive a
+                        # role being DOWN for a while, not just bouncing)
+                        delay = float(sup.respawn_delay(role))
+                        if delay > 0:
+                            pending_respawn[role] = \
+                                time.monotonic() + delay
+                        else:
+                            self._procs[role] = spawn(role, resume=True)
+                    if time.monotonic() - last_snap >= rc.snapshot_every_s:
+                        snap_step = self._snapshot(ckpt_dir, model_srv,
+                                                   policy_srv, snap_step)
+                        sup.on_snapshot(snap_step)
+                        last_snap = time.monotonic()
+                    time.sleep(0.02)
+                sup.on_complete()   # un-stall anything before clean joins
+                stop.set()
+                for role in ("model", "policy"):
+                    self._procs[role].join(timeout=120)
+                # final eval row arrives AFTER the policy child saw stop
+                try:
+                    self.recorder.trace.append(trace_q.get(timeout=10))
+                except _queue.Empty:
+                    pass
+                self._drain_trace(trace_q)
+                # adopt the children's final published params so the
+                # parent looks exactly like a threads-mode trainer after
+                m_final, mv = model_srv.pull_host()
+                p_final, pv = policy_srv.pull_host()
+                if p_final is not None:
+                    self.policy_worker.state = {
+                        **self.policy_worker.state,
+                        "policy": jax.tree.map(jnp.asarray, p_final)}
+                    self.policy_server.push(
+                        self.policy_worker.state["policy"])
+                if m_final is not None:
+                    self.model_worker.params = jax.tree.map(
+                        jnp.asarray, m_final)
+                    self.model_server.push(self.model_worker.params)
+                self.collector.collected = data_srv.total_pushed
+                snap_step = self._snapshot(ckpt_dir, model_srv, policy_srv,
+                                           snap_step)
+                self.proc_info.update({
+                    "model_version": int(mv), "policy_version": int(pv),
+                    "restarts": dict(restarts),
+                    "trajs": data_srv.total_pushed,
+                    "n_collectors": rc.n_collectors,
+                    "noise_scales": [self.exploration.scale_for(i)
+                                     for i in range(rc.n_collectors)]})
+            finally:
+                # FIRST: let the supervisor make children joinable again
+                # (a chaos stall leaves a child SIGSTOPped — terminate()
+                # sends SIGTERM, which a stopped process never handles)
+                try:
+                    sup.on_teardown(self._procs)
+                except Exception:
+                    pass
+                stop.set()
+                for p in self._procs.values():
+                    if p.is_alive():
+                        p.join(timeout=10)
+                    if p.is_alive():
+                        p.terminate()
+                        p.join(timeout=5)
+                    if p.is_alive():
+                        p.kill()    # SIGKILL: even a wedged/stopped
+                        p.join(timeout=5)   # child must not outlive us
+                # break the trainer<->supervisor cycle so refcounting
+                # frees every remaining mp primitive (heartbeat arena,
+                # locks, semaphore names) as soon as the caller drops
+                # the trainer — see Supervisor.detach
+                sup.detach()
+                # servers close via the ExitStack on every exit path
         return self.recorder.trace
 
 

@@ -268,6 +268,46 @@ class DataServer:
 _SHM_HEADER = 64            # [0:8) seqlock, [8:16) version, rest reserved
 _SHM_ALIGN = 64             # leaf payloads start cache-line aligned
 
+# ---- auditable lifetime registries (chaos/soak, PR 7) ----------------
+# Every IPC resource this PROCESS creates (shm segments it owns, data
+# servers it constructed) is registered at birth and unregistered by
+# close(), so a resource auditor can prove "zero leaks" by asserting the
+# registries are empty after shutdown — and a supervisor's last-resort
+# cleanup can reclaim stragglers without knowing who made them.
+_REGISTRY_LOCK = threading.Lock()
+_SHM_REGISTRY: Dict[str, "ShmParameterServer"] = {}
+_DATA_REGISTRY: Dict[int, "ProcDataServer"] = {}
+
+
+def live_shm_segments() -> Tuple[str, ...]:
+    """Names of posix shm segments created by this process and not yet
+    closed/unlinked. Empty after every clean or chaotic shutdown."""
+    with _REGISTRY_LOCK:
+        return tuple(sorted(_SHM_REGISTRY))
+
+
+def live_data_servers() -> int:
+    """Count of ProcDataServers constructed by this process whose
+    ``close()`` has not run yet."""
+    with _REGISTRY_LOCK:
+        return len(_DATA_REGISTRY)
+
+
+def reclaim_ipc_resources() -> int:
+    """Guaranteed-reclaim path: close every still-registered shm segment
+    and data server created by this process. Returns how many resources
+    were reclaimed. Safe to call repeatedly; normal shutdown (context
+    managers / runtime ExitStack) leaves nothing for it to do."""
+    with _REGISTRY_LOCK:
+        stragglers = list(_SHM_REGISTRY.values()) + \
+            list(_DATA_REGISTRY.values())
+    for res in stragglers:
+        try:
+            res.close()
+        except Exception:
+            pass
+    return len(stragglers)
+
 
 def _attach_shm(name):
     """Attach (never create) an existing segment WITHOUT handing its
@@ -354,6 +394,8 @@ class ShmParameterServer:
         shm.buf[:_SHM_HEADER] = b"\0" * _SHM_HEADER
         self.copies = 0             # client-local: leaves copied OUT
         self.pushes = 0             # client-local: pushes issued
+        with _REGISTRY_LOCK:        # auditable lifetime (creator only)
+            _SHM_REGISTRY[self._name] = self
 
     # -- pickling: children re-attach to the named segment lazily -------
     def __getstate__(self):
@@ -443,7 +485,9 @@ class ShmParameterServer:
 
     # -- lifecycle ------------------------------------------------------
     def close(self) -> None:
-        """Drop this process's mapping (and unlink if creator)."""
+        """Drop this process's mapping (and unlink if creator).
+        Idempotent; the creator's close also clears the audit registry
+        entry, so ``live_shm_segments()`` proves reclamation."""
         self._views = None          # np views pin shm.buf; drop them first
         if self._shm is not None:
             self._shm.close()
@@ -453,6 +497,17 @@ class ShmParameterServer:
                 except FileNotFoundError:
                     pass
             self._shm = None
+        if self._owner:
+            with _REGISTRY_LOCK:
+                _SHM_REGISTRY.pop(self._name, None)
+
+    def __enter__(self) -> "ShmParameterServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        # teardown must not depend on GC order: runtime._run_procs holds
+        # every server in one ExitStack so ALL exit paths reclaim
+        self.close()
 
 
 class BackpressureError(RuntimeError):
@@ -521,6 +576,15 @@ class ProcDataServer:
         self._total = ctx.Value("q", 0, lock=False)
         self._tickets = ctx.Value("q", 0, lock=False)
         self._inflight = ctx.Array("q", self.n_collectors, lock=False)
+        self._closed = False
+        self._creator = True        # children unpickle; only the creator
+        with _REGISTRY_LOCK:        # process registers for the audit
+            _DATA_REGISTRY[id(self)] = self
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_creator"] = False   # a child's copy is not auditable here
+        return state
 
     def _raise_backpressure(self, collector_id, timeout):
         raise BackpressureError(
@@ -634,8 +698,24 @@ class ProcDataServer:
             return 0
 
     def close(self) -> None:
+        """Release this process's queue endpoint (feeder thread + pipe
+        fds). Idempotent; the shared counters stay readable afterwards
+        (``total_pushed`` still works for post-run reporting). The
+        creator's close clears its audit-registry entry."""
+        if self._closed:
+            return
+        self._closed = True
         self._q.close()
         self._q.join_thread()
+        if self._creator:
+            with _REGISTRY_LOCK:
+                _DATA_REGISTRY.pop(id(self), None)
+
+    def __enter__(self) -> "ProcDataServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 # --------------------------------------------------------------------- ring

@@ -49,6 +49,7 @@ from repro.core.servers import DataServer, ParameterServer, ReplayBuffer
 from repro.mbrl import dynamics as DYN
 from repro.mbrl import policy as PI
 from repro.mbrl.early_stop import EMAEarlyStop
+from repro.utils.jit_stats import jit_cache_size
 
 
 def _to_device(tree):
@@ -106,6 +107,22 @@ def collector_key(key, collector_id: int):
     pre-fleet engine); every other collector folds its id in."""
     return key if collector_id == 0 else jax.random.fold_in(
         key, collector_id)
+
+
+def heartbeat_slot(role: str, n_collectors: int = 1) -> int:
+    """Index of ``role``'s slot in the shared heartbeat array (see
+    ProcChannels.heartbeat): model=0, policy=1, collector:<i>=2+i."""
+    if role == "model":
+        return 0
+    if role == "policy":
+        return 1
+    cid = int(role.split(":", 1)[1]) if ":" in role else 0
+    return 2 + (cid % max(int(n_collectors), 1))
+
+
+def heartbeat_slots(n_collectors: int) -> int:
+    """Total heartbeat slots for a run: model + policy + the fleet."""
+    return 2 + max(int(n_collectors), 1)
 
 
 def default_burst(n_collectors: int, envs_per_step: int = 1) -> int:
@@ -241,6 +258,18 @@ class DataCollectionWorker:
             None if self.envs_per_step == 1 else
             _rollout_batch_jit(env, self.noise_scale, self.envs_per_step))
 
+    def compile_count(self) -> int:
+        """Compiled-program entries across this collector's OWN rollout
+        jits (liveness/invariant telemetry for the chaos monitor): the
+        single-rollout program plus — for a farm — its full-B program.
+        Steady state is 1 (B=1) or at most 2 (B>1: the full batch, plus
+        the single-rollout variant a final grant of g=1 may touch);
+        anything above means a retrace. -1 when jax hides the caches."""
+        fns = [self._rollout] + (
+            [] if self._rollout_batch is None else [self._rollout_batch])
+        sizes = [jit_cache_size(f) for f in fns]
+        return -1 if any(s < 0 for s in sizes) else sum(sizes)
+
     def poll_policy(self) -> bool:
         """Refresh the policy cache (version-gated) WITHOUT collecting.
         True once a policy is available — procs-mode collectors spin on
@@ -343,6 +372,13 @@ class ModelLearningWorker:
                                   batch_sharding=self._batch_shard)
         self.opt_state = opt.init(self.params)
 
+    def compile_count(self) -> int:
+        """Traces of the ring ``train_epoch`` (exact, via TraceCounted).
+        The PR 1 invariant says this is 1 for the whole life of the
+        worker once data exists — the chaos monitor asserts it DURING
+        soak runs, per child incarnation."""
+        return jit_cache_size(self._train_epoch)
+
     def _refresh_data(self) -> bool:
         new = self.data_server.drain()                  # Pull (move all)
         if new:
@@ -413,6 +449,13 @@ class PolicyImprovementWorker:
         self._model_ver = 0
         self.steps = 0
 
+    def compile_count(self) -> int:
+        """Compiled entries of the algo's one fused ``_improve`` jit
+        (static shapes: steady state is exactly 1). -1 when the algo
+        doesn't expose it — the chaos monitor then skips the check."""
+        fn = getattr(self.algo, "_improve", None)
+        return jit_cache_size(fn) if fn is not None else -1
+
     def step(self) -> bool:
         fresh, self._model_ver = self.model_server.pull_if_newer(
             self._model_ver, sharding=self._repl)       # Pull (gated)
@@ -464,11 +507,40 @@ class ProcChannels:
     stop: Any                   # mp.Event: parent-ordered shutdown
     t0: float                   # parent's monotonic run start (shared
     #                             CLOCK_MONOTONIC: rows are run-relative)
+    # liveness + invariant telemetry (chaos/soak, PR 7): a lock-free
+    # mp.Array('d') of 2 doubles per heartbeat_slot — [last beat
+    # monotonic, worker compile_count]. Single writer per slot (the
+    # role's child); aligned 8-byte stores, so the parent's monitor
+    # reads are never torn in practice. None = telemetry off (every
+    # pre-chaos caller), all beats no-ops.
+    heartbeat: Any = None
+
+    def beat(self, slot: int, compiles: int = -1) -> None:
+        """One worker-loop heartbeat: stamp the clock and publish the
+        worker's current compile count. Cheap enough for every loop
+        iteration (two array stores, no lock)."""
+        hb = self.heartbeat
+        if hb is None:
+            return
+        hb[2 * slot] = time.monotonic()
+        hb[2 * slot + 1] = float(compiles)
+
+    def read_heartbeat(self, slot: int):
+        """(last_beat_monotonic, compile_count) for one slot — parent
+        side. (0.0, 0.0) until the child's first beat."""
+        hb = self.heartbeat
+        if hb is None:
+            return 0.0, 0.0
+        return float(hb[2 * slot]), float(hb[2 * slot + 1])
 
 
 def _load_snapshot(resume_dir, spec):
-    """Latest parent snapshot as (tree, step) or (None, None). The
-    template is rebuilt from configs via eval_shape — no device work."""
+    """Latest COMPLETE parent snapshot as (tree, step) or (None, None).
+    The template is rebuilt from configs via eval_shape — no device
+    work. Corruption-tolerant: ``restore`` already skips truncated
+    snapshots (newest-complete-first), and if NOTHING under the dir
+    loads, a restarting worker starts fresh instead of crash-looping on
+    a poisoned checkpoint (restart-under-fire, PR 7)."""
     import numpy as np
 
     from repro.checkpoint import io as ckpt_io
@@ -482,12 +554,16 @@ def _load_snapshot(resume_dir, spec):
             lambda: PI.init_policy(spec.pol_cfg, jax.random.key(0))),
         "policy_version": jax.ShapeDtypeStruct((), np.int64),
     }
-    return ckpt_io.restore(resume_dir, template)
+    try:
+        return ckpt_io.restore(resume_dir, template)
+    except Exception:
+        return None, None
 
 
 def _proc_collector(spec, ch, key, collector_id: int = 0):
     rc = spec.run_cfg
     sched = spec.exploration or ExplorationSchedule()
+    slot = heartbeat_slot(f"collector:{collector_id}", rc.n_collectors)
     w = DataCollectionWorker(spec.env, ch.policy_server, ch.data, None,
                              key, speed=rc.collect_speed,
                              collector_id=collector_id,
@@ -497,11 +573,13 @@ def _proc_collector(spec, ch, key, collector_id: int = 0):
     # claimed ticket must always be fulfilled by the very next step, or
     # the fleet's exact stopping criterion would stall on it
     while not ch.stop.is_set() and not w.poll_policy():
+        ch.beat(slot, w.compile_count())
         time.sleep(0.005)
     # restart-safe stopping criterion: tickets live in the shared
     # ProcDataServer, so a restarted collector resumes the GLOBAL count
     # (the parent refunds the tickets of a crash-interrupted batch)
     while not ch.stop.is_set():
+        ch.beat(slot, w.compile_count())
         g = ch.data.try_claim(collector_id, k=w.envs_per_step)
         if not g:
             break                   # global target fully claimed: done
@@ -516,6 +594,7 @@ def _proc_collector(spec, ch, key, collector_id: int = 0):
             # robot control frequency: one trajectory occupies `dur`
             # seconds of real time however fast the simulation computes
             time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
+    ch.beat(slot, w.compile_count())
 
 
 def _proc_model(spec, ch, key, resume_dir):
@@ -535,9 +614,12 @@ def _proc_model(spec, ch, key, resume_dir):
         # the live trajectory queue.)
         w.params = _to_device(snap["model"])
         ch.model_server.push(w.params)
+    slot = heartbeat_slot("model", rc.n_collectors)
     while not ch.stop.is_set():
+        ch.beat(slot, w.compile_count())
         if w.step() is None:
             time.sleep(0.002)
+    ch.beat(slot, w.compile_count())
 
 
 def _proc_policy(spec, ch, key, keval, resume_dir):
@@ -563,14 +645,17 @@ def _proc_policy(spec, ch, key, keval, resume_dir):
                    w.state["policy"], k)
         ch.trace_q.put(rec.trace[-1])
 
+    slot = heartbeat_slot("policy", rc.n_collectors)
     n = 0
     while not ch.stop.is_set():
+        ch.beat(slot, w.compile_count())
         if w.step():
             n += 1
             if n % rc.eval_every_policy_steps == 0:
                 record()
         else:
             time.sleep(0.002)
+    ch.beat(slot, w.compile_count())
     record()                        # final eval at shutdown
 
 

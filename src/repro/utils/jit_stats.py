@@ -32,3 +32,20 @@ class TraceCounted:
 
 def trace_counted(fn, **jit_kw) -> TraceCounted:
     return TraceCounted(fn, **jit_kw)
+
+
+def jit_cache_size(fn) -> int:
+    """Number of compiled entries a jitted callable holds, or -1 when it
+    cannot be determined. Works for plain ``jax.jit`` objects (their
+    ``_cache_size()``) and :class:`TraceCounted` wrappers (their exact
+    ``trace_count``). The chaos invariant monitor (repro.chaos) reads
+    this through worker ``compile_count()`` methods to assert
+    zero-retrace-after-warmup DURING a run, not just in tests."""
+    if fn is None:
+        return 0
+    if isinstance(fn, TraceCounted):
+        return int(fn.trace_count)
+    try:
+        return int(fn._cache_size())
+    except Exception:
+        return -1

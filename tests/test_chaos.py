@@ -1,0 +1,367 @@
+"""Chaos engine + soak harness (PR 7) — ISSUE 7 acceptance tests.
+
+Unit-level: deterministic seeded fault plans with guaranteed role
+coverage and budget caps; the supervisor seam (chain fan-out, delayed
+respawns); the invariant monitor catching planted violations against
+fake trainers; the resource auditor catching planted fd / registry
+leaks; server context managers + audit registries.
+
+End-to-end (``slow``): the micro soak profile — a real
+``AsyncTrainer(mode="procs")`` run under seeded SIGKILLs and stalls —
+completes with zero invariant violations and zero leaked resources.
+"""
+import json
+import os
+import signal
+import subprocess
+import time
+
+import pytest
+
+from repro.chaos import (KILL, STALL, ChaosSupervisor, FaultEvent,
+                         FaultPlan, InvariantMonitor, ResourceAuditor)
+from repro.chaos.audit import warmup_ipc
+from repro.chaos.faults import role_family
+from repro.core import (RunConfig, Supervisor, SupervisorChain,
+                        live_data_servers, live_shm_segments)
+from repro.core.workers import heartbeat_slot
+
+
+# ------------------------------------------------------------ fault plans
+def test_fault_plan_deterministic_and_covering():
+    kw = dict(n_collectors=3, n_faults=14, max_kills_per_role=3)
+    p1 = FaultPlan.generate(7, **kw)
+    p2 = FaultPlan.generate(7, **kw)
+    assert p1 == p2, "same seed must give an identical plan"
+    assert FaultPlan.generate(8, **kw) != p1, "seeds must differ"
+    assert len(p1.events) == 14
+    assert p1.families() == ("collector", "model", "policy")
+    kinds = {e.kind for e in p1.events}
+    assert kinds == {KILL, STALL}
+    kills = {}
+    for e in p1.events:
+        assert 0.05 <= e.at <= 0.85
+        if e.kind == KILL:
+            kills[e.role] = kills.get(e.role, 0) + 1
+    assert kills and max(kills.values()) <= 3
+    ats = [e.at for e in p1.events]
+    assert ats == sorted(ats)
+
+
+def test_fault_plan_covers_all_families_for_many_seeds():
+    for seed in range(20):
+        p = FaultPlan.generate(seed, n_collectors=2, n_faults=5,
+                               max_kills_per_role=2)
+        assert p.families() == ("collector", "model", "policy"), seed
+
+
+# ------------------------------------------------------- supervisor seam
+class _Recording(Supervisor):
+    def __init__(self, delay=0.0):
+        self.calls = []
+        self.delay = delay
+
+    def attach(self, trainer):
+        super().attach(trainer)
+        self.calls.append("attach")
+
+    def detach(self):
+        super().detach()
+        self.calls.append("detach")
+
+    def on_tick(self):
+        self.calls.append("tick")
+
+    def respawn_delay(self, role):
+        return self.delay
+
+
+def test_supervisor_chain_fans_out_and_maxes_delay():
+    a, b = _Recording(delay=0.2), _Recording(delay=0.7)
+    chain = SupervisorChain(a, b)
+    chain.attach(object())
+    chain.on_tick()
+    assert chain.respawn_delay("model") == 0.7, \
+        "chain must take the MAX member delay"
+    chain.detach()
+    for m in (a, b):
+        assert m.calls == ["attach", "tick", "detach"]
+        assert m.trainer is None
+
+
+def test_supervisor_rejected_outside_procs_mode():
+    from repro.core import AsyncTrainer
+    with pytest.raises(ValueError, match="procs"):
+        AsyncTrainer(None, None, None, mode="event",
+                     supervisor=Supervisor())
+
+
+# ------------------------------------------------- monitor (fake trainer)
+class _FakeSrv:
+    def __init__(self, version=0):
+        self.version = version
+
+
+class _FakeData:
+    def __init__(self, pushed=0):
+        self.total_pushed = pushed
+
+
+class _FakeChannels:
+    def __init__(self):
+        self.beats = {}
+
+    def read_heartbeat(self, slot):
+        return self.beats.get(slot, (0.0, 0.0))
+
+
+class _FakeTrainer:
+    def __init__(self, rc):
+        self.run_cfg = rc
+        self._proc_servers = {"model": _FakeSrv(), "policy": _FakeSrv(),
+                              "data": _FakeData()}
+        self.proc_info = {"restarts": {"model": 0, "policy": 0,
+                                       "collector:0": 0}}
+        self._proc_channels = _FakeChannels()
+
+
+def _monitored(rc=None):
+    tr = _FakeTrainer(rc or RunConfig(total_trajs=10, max_restarts=2))
+    mon = InvariantMonitor(check_every_s=0.0)
+    mon.attach(tr)
+    return tr, mon
+
+
+def test_monitor_clean_run_has_no_violations():
+    tr, mon = _monitored()
+    tr._proc_servers["model"].version = 3
+    tr._proc_servers["data"].total_pushed = 10
+    mon.on_tick()
+    tr._proc_servers["data"].total_pushed = 10
+    mon.on_complete()
+    assert mon.violations == []
+
+
+def test_monitor_flags_version_regression():
+    tr, mon = _monitored()
+    tr._proc_servers["model"].version = 5
+    mon.on_tick()
+    tr._proc_servers["model"].version = 2     # a restart reset the word
+    mon.on_tick()
+    assert any("BACKWARDS" in v for v in mon.violations)
+
+
+def test_monitor_flags_criterion_overshoot_and_miss():
+    tr, mon = _monitored()
+    tr._proc_servers["data"].total_pushed = 11      # > total_trajs=10
+    mon.on_tick()
+    assert any("OVERSHOT" in v for v in mon.violations)
+    tr2, mon2 = _monitored()
+    tr2._proc_servers["data"].total_pushed = 9      # landed short
+    mon2.on_complete()
+    assert any("criterion missed" in v for v in mon2.violations)
+
+
+def test_monitor_flags_retrace_and_budget():
+    tr, mon = _monitored()
+    slot = heartbeat_slot("model", tr.run_cfg.n_collectors)
+    tr._proc_channels.beats[slot] = (1.0, 3.0)      # 3 compiles, cap 1
+    tr.proc_info["restarts"]["collector:0"] = 99
+    mon.on_tick()
+    assert any("RETRACED" in v for v in mon.violations)
+    assert any("restart budget" in v for v in mon.violations)
+    # unknown compile counts (-1) are not violations
+    tr2, mon2 = _monitored()
+    slot2 = heartbeat_slot("policy", tr2.run_cfg.n_collectors)
+    tr2._proc_channels.beats[slot2] = (1.0, -1.0)
+    mon2.on_tick()
+    assert mon2.violations == []
+
+
+# --------------------------------------------- chaos injection (no jax)
+class _PopenProc:
+    """Adapter giving a subprocess the mp.Process surface chaos uses."""
+
+    def __init__(self, argv=("sleep", "60")):
+        self._p = subprocess.Popen(argv)
+        self.pid = self._p.pid
+
+    @property
+    def exitcode(self):
+        return self._p.poll()
+
+    def kill(self):
+        try:
+            self._p.kill()
+        except OSError:
+            pass
+        self._p.wait()
+
+
+def _chaos_trainer(procs, total=10, pushed=5, max_restarts=2):
+    tr = _FakeTrainer(RunConfig(total_trajs=total,
+                                max_restarts=max_restarts))
+    tr._procs = procs
+    tr._proc_servers["data"].total_pushed = pushed
+    return tr
+
+
+def test_chaos_kill_injection_and_respawn_delay():
+    p = _PopenProc()
+    try:
+        plan = FaultPlan(seed=0, events=(
+            FaultEvent(at=0.1, kind=KILL, role="model", arg=0.25),))
+        sup = ChaosSupervisor(plan)
+        sup.attach(_chaos_trainer({"model": p}))
+        sup.on_tick()       # progress 0.5 >= 0.1: fires
+        assert len(sup.injected) == 1
+        deadline = time.monotonic() + 10
+        while p.exitcode is None and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert p.exitcode == -signal.SIGKILL
+        assert sup.respawn_delay("model") == 0.25
+        assert sup.respawn_delay("model") == 0.0    # one-shot
+    finally:
+        p.kill()
+
+
+def test_chaos_stall_then_resume():
+    p = _PopenProc()
+    try:
+        plan = FaultPlan(seed=0, events=(
+            FaultEvent(at=0.1, kind=STALL, role="model", arg=0.2),))
+        sup = ChaosSupervisor(plan)
+        sup.attach(_chaos_trainer({"model": p}))
+        sup.on_tick()
+        assert sup.injected and sup.injected[0]["kind"] == STALL
+
+        def state():
+            with open(f"/proc/{p.pid}/stat") as f:
+                return f.read().rsplit(")", 1)[1].split()[0]
+
+        deadline = time.monotonic() + 5
+        while state() != "T" and time.monotonic() < deadline:
+            time.sleep(0.02)    # signal delivery is asynchronous
+        assert state() == "T", "child not SIGSTOPped"
+        time.sleep(0.25)
+        sup.on_tick()       # stall expired: SIGCONT
+        deadline = time.monotonic() + 5
+        while state() == "T" and time.monotonic() < deadline:
+            time.sleep(0.02)
+        assert state() != "T", "child never resumed"
+        assert p.exitcode is None
+    finally:
+        p.kill()
+
+
+def test_chaos_skips_kill_without_budget_headroom_and_defers_when_down():
+    kill_model = FaultEvent(at=0.1, kind=KILL, role="model", arg=0.0)
+    # no headroom: restarts already at max_restarts -> skipped, loudly
+    dead = _FakeTrainer(RunConfig(total_trajs=10, max_restarts=2))
+    dead._procs = {"model": _PopenProc()}
+    try:
+        dead._proc_servers["data"].total_pushed = 5
+        dead.proc_info["restarts"]["model"] = 2
+        sup = ChaosSupervisor(FaultPlan(seed=0, events=(kill_model,)))
+        sup.attach(dead)
+        sup.on_tick()
+        assert not sup.injected
+        assert sup.skipped and "headroom" in sup.skipped[0]["reason"]
+    finally:
+        dead._procs["model"].kill()
+    # role currently down (exitcode set) -> deferred, not dropped
+    class _DeadProc:
+        pid = 1
+        exitcode = -9
+    tr = _chaos_trainer({"model": _DeadProc()})
+    sup = ChaosSupervisor(FaultPlan(seed=0, events=(kill_model,)))
+    sup.attach(tr)
+    sup.on_tick()
+    assert not sup.injected and not sup.skipped
+    assert len(sup._queue) == 1
+    sup.on_complete()       # run ends first: flushed as skipped
+    assert sup.skipped and "completed" in sup.skipped[0]["reason"]
+
+
+# ------------------------------------------------------- resource audit
+def test_auditor_catches_fd_leak_then_clean():
+    warmup_ipc()
+    auditor = ResourceAuditor()
+    auditor.baseline()
+    r, w = os.pipe()
+    report = auditor.audit(settle_s=0.3)
+    assert not report["ok"]
+    assert any("pipe:" in f for f in report["leaked_fds"])
+    os.close(r)
+    os.close(w)
+    assert auditor.audit(settle_s=2.0)["ok"]
+
+
+def test_auditor_catches_unclosed_server_then_reclaim():
+    import numpy as np
+
+    from repro.core import ShmParameterServer
+    warmup_ipc()
+    auditor = ResourceAuditor()
+    auditor.baseline()
+    srv = ShmParameterServer({"w": np.zeros((4,), np.float32)})
+    report = auditor.audit(settle_s=0.3)
+    assert not report["ok"]
+    assert report["registries"]["shm_segments"], \
+        "unclosed ShmParameterServer missing from the audit registry"
+    srv.close()
+    report = auditor.audit(settle_s=2.0)
+    assert report["ok"], report
+
+
+# ------------------------------------- context managers + registries
+def test_shm_server_context_manager_and_registry():
+    import numpy as np
+
+    from repro.core import ShmParameterServer
+    base = live_shm_segments()
+    with ShmParameterServer({"w": np.zeros((2,), np.float32)}) as srv:
+        assert len(live_shm_segments()) == len(base) + 1
+        srv.push({"w": np.ones((2,), np.float32)})
+        assert srv.version == 1
+    assert live_shm_segments() == base
+    srv.close()     # idempotent
+
+
+def test_proc_data_server_context_manager_and_registry():
+    import multiprocessing as mp
+
+    from repro.core import ProcDataServer
+    ctx = mp.get_context("spawn")
+    base = live_data_servers()
+    with ProcDataServer(ctx, n_collectors=2, target=4) as ds:
+        assert live_data_servers() == base + 1
+        assert ds.try_claim(0, k=4) == 4
+    assert live_data_servers() == base
+    ds.close()      # idempotent
+    assert ds.total_pushed == 0     # counters stay readable after close
+
+
+# ------------------------------------------------------ end-to-end soak
+@pytest.mark.slow
+@pytest.mark.timeout(540)
+def test_soak_micro_end_to_end(tmp_path):
+    """The micro chaos profile: a real procs run under seeded kills and
+    stalls completes with zero violations and zero leaks, and the
+    machine-readable report says so."""
+    from repro.chaos.soak import run_soak
+    out = tmp_path / "SOAK_report.json"
+    code = run_soak("micro", 0, out=str(out))
+    rep = json.loads(out.read_text())
+    assert code == 0 and rep["ok"], rep["problems"]
+    (run,) = rep["runs"]
+    assert run["error"] is None
+    assert run["monitor"]["violations"] == []
+    assert run["audit"]["ok"], run["audit"]
+    injected = run["faults"]["injected"]
+    assert len(injected) >= 3
+    assert {role_family(f["role"]) for f in injected} == \
+        {"collector", "model", "policy"}
+    assert run["trajs"] == rep["config"]["total_trajs"], \
+        "chaos run missed the exact criterion"
+    assert run["model_version"] >= 1 and run["policy_version"] >= 1

@@ -42,3 +42,47 @@ def test_shape_mismatch_raises(tmp_path):
     bad["w"] = [jnp.zeros((5, 3)), tree["w"][1]]
     with pytest.raises(AssertionError):
         load_pytree(tmp_path / "ck", bad)
+
+
+# ------------------------------------------- crash-atomic writes (PR 7)
+def test_restore_skips_truncated_snapshot(tmp_path):
+    """A snapshot torn mid-write (truncated arrays.npz — only possible
+    for pre-atomic writers or filesystem damage) must not poison
+    restarts: restore falls back to the newest COMPLETE step."""
+    tree = make_tree(jax.random.key(3))
+    save_pytree(tmp_path / "run", tree, step=1)
+    save_pytree(tmp_path / "run", tree, step=2)
+    npz = tmp_path / "run" / "step_000000002" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:10])          # truncate
+    out, step = restore(tmp_path / "run", tree)
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_restore_raises_when_nothing_complete(tmp_path):
+    tree = make_tree(jax.random.key(4))
+    save_pytree(tmp_path / "run", tree, step=1)
+    npz = tmp_path / "run" / "step_000000001" / "arrays.npz"
+    npz.write_bytes(b"not a checkpoint")
+    with pytest.raises(FileNotFoundError, match="no complete checkpoint"):
+        restore(tmp_path / "run", tree)
+
+
+def test_tmp_leftovers_are_invisible_and_swept(tmp_path):
+    """A writer SIGKILLed mid-snapshot leaves only a ``step_*.tmp`` dir.
+    It must not crash ``latest_step`` (the int parse used to choke on
+    it), must be skipped by ``restore``, and gets swept by the next
+    successful save."""
+    tree = make_tree(jax.random.key(5))
+    save_pytree(tmp_path / "run", tree, step=1)
+    orphan = tmp_path / "run" / "step_000000002.tmp"
+    orphan.mkdir()
+    (orphan / "arrays.npz").write_bytes(b"partial")
+    assert latest_step(tmp_path / "run") == 1
+    _, step = restore(tmp_path / "run", tree)
+    assert step == 1
+    save_pytree(tmp_path / "run", tree, step=3)
+    assert not orphan.exists()                      # swept
+    assert latest_step(tmp_path / "run") == 3

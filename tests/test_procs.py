@@ -502,3 +502,60 @@ def test_procs_model_worker_killed_restarts_from_snapshot(tmp_path):
     assert all_finite(tr.policy_worker.state["policy"])
     assert all_finite(tr.model_worker.params)
     assert out["trace"], "no eval trace after restart"
+
+
+@pytest.mark.slow
+@pytest.mark.timeout(900)
+def test_procs_collector_kills_past_budget_fail_loudly(tmp_path):
+    """SIGKILL the same fleet collector ``max_restarts + 1`` times: the
+    supervisor must fail the run with a RuntimeError naming the role and
+    its per-role budget — never hang, never complete quietly (ISSUE 7).
+    The second collector keeps the run alive between kills, proving the
+    budget really is per-role."""
+    env = make_env("pendulum")
+    ens, pol, acfg = small_cfgs(env)
+    rc = RunConfig(total_trajs=30, seed=SEED, min_warmup_trajs=2,
+                   pace_collection=True, collect_speed=2.0,
+                   snapshot_every_s=0.5, max_restarts=1,
+                   ckpt_dir=str(tmp_path / "ckpt"))
+    tr = AsyncTrainer(env, ens, None, rc, mode="procs",
+                      algo_cfg=acfg, pol_cfg=pol, n_collectors=2)
+    out = {}
+
+    def run():
+        try:
+            out["trace"] = tr.run()
+            out["error"] = None
+        except Exception as e:  # noqa: BLE001 — the error IS the assertion
+            out["error"] = e
+
+    th = threading.Thread(target=run, daemon=True)
+    th.start()
+    # kill every incarnation of collector:0 as it comes up (original +
+    # each respawn) until the budget of max_restarts=1 is exceeded
+    kills, seen = 0, set()
+    deadline = time.monotonic() + 600
+    while kills < rc.max_restarts + 1 and time.monotonic() < deadline:
+        if not th.is_alive():
+            break
+        procs = getattr(tr, "_procs", None)
+        p = procs.get("collector:0") if procs else None
+        if p is not None and p.pid not in seen and p.exitcode is None:
+            seen.add(p.pid)
+            try:
+                os.kill(p.pid, signal.SIGKILL)
+                kills += 1
+            except ProcessLookupError:
+                pass
+        time.sleep(0.05)
+    assert kills == rc.max_restarts + 1, f"only delivered {kills} kills"
+    th.join(timeout=700)
+    assert not th.is_alive(), \
+        "run wedged instead of failing the exhausted restart budget"
+    err = out["error"]
+    assert isinstance(err, RuntimeError), f"expected RuntimeError, got {err!r}"
+    assert "collector:0" in str(err), str(err)
+    assert "max_restarts=1" in str(err), str(err)
+    assert tr.proc_info["restarts"]["collector:0"] == rc.max_restarts + 1
+    # the failure tore the fleet down: no child outlives the run
+    assert all(p.exitcode is not None for p in tr._procs.values())

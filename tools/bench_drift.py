@@ -1,0 +1,148 @@
+#!/usr/bin/env python
+"""Diff BENCH_*.json metric trajectories and flag drift beyond
+host-noise bands (PR 7 — the PR 5 re-baseline caveat, made mechanical).
+
+Benchmark numbers move for two very different reasons: host noise
+(shared runners, turbo states, cache weather) and real regressions. The
+repo's committed baselines get re-measured whenever the bench harness
+itself changes shape, so "the number changed" alone is meaningless —
+what matters is whether it changed by MORE than that metric's expected
+noise. This tool encodes those bands:
+
+* counts (``*_compiles*``, ``*_steps``, anything integer-exact) —
+  band 0%: any change is drift (a compile count has no noise);
+* latencies (``*_us``, ``*_wall_s``) — 25%;
+* rates (``*_per_s``, ``*_speedup_x``) — 30% (throughputs wobble more:
+  they compound scheduler + queue effects);
+* everything else numeric — 30%;
+* boolean invariants — any flip is drift.
+
+Usage::
+
+    python tools/bench_drift.py BENCH_hotpath.json fresh.json
+    python tools/bench_drift.py a.json b.json c.json   # trajectory:
+                                                       # consecutive pairs
+    python tools/bench_drift.py --strict ...           # exit 1 on drift
+    python tools/bench_drift.py --json drift.json ...
+
+Exit status: 0 (no drift, or drift found but not --strict), 1 (drift
+with --strict), 2 (usage/load error). CI runs it informationally on
+every PR and strictly in the scheduled soak job.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+LATENCY_BAND = 0.25
+RATE_BAND = 0.30
+DEFAULT_BAND = 0.30
+
+
+def band_for(name: str, value: Any) -> float:
+    """Relative noise band for one metric; 0.0 means exact."""
+    if isinstance(value, bool):
+        return 0.0
+    if "compiles" in name or name.endswith("_steps"):
+        return 0.0
+    if isinstance(value, int):
+        return 0.0
+    if name.endswith("_us") or name.endswith("_wall_s") \
+            or name.endswith("_s"):
+        return LATENCY_BAND
+    if name.endswith("_per_s") or name.endswith("_speedup_x"):
+        return RATE_BAND
+    return DEFAULT_BAND
+
+
+def _numbers(doc: Dict[str, Any]) -> Dict[str, Any]:
+    """Flatten the comparable scalars of one BENCH json: metrics plus
+    boolean invariants."""
+    out: Dict[str, Any] = {}
+    for k, v in (doc.get("invariants") or {}).items():
+        out[f"invariants.{k}"] = v
+    for k, v in (doc.get("metrics") or {}).items():
+        if isinstance(v, (int, float, bool)):
+            out[k] = v
+    return out
+
+
+def diff_pair(a_doc: Dict[str, Any], b_doc: Dict[str, Any]
+              ) -> List[Dict[str, Any]]:
+    """All drifting metrics between two BENCH documents."""
+    a, b = _numbers(a_doc), _numbers(b_doc)
+    findings = []
+    for name in sorted(set(a) & set(b)):
+        va, vb = a[name], b[name]
+        band = band_for(name, va)
+        if isinstance(va, bool) or isinstance(vb, bool):
+            drifted = bool(va) != bool(vb)
+            rel = None
+        elif band == 0.0:
+            drifted = va != vb
+            rel = None
+        else:
+            ref = max(abs(float(va)), 1e-12)
+            rel = abs(float(vb) - float(va)) / ref
+            drifted = rel > band
+        if drifted:
+            findings.append({
+                "metric": name, "before": va, "after": vb,
+                "rel_change": None if rel is None else round(rel, 4),
+                "band": band})
+    return findings
+
+
+def load(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python tools/bench_drift.py", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("files", nargs="+",
+                    help="two or more BENCH_*.json files, oldest first")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 when any metric drifts beyond its band")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write the findings as JSON")
+    args = ap.parse_args(argv)
+    if len(args.files) < 2:
+        ap.error("need at least two files to diff")
+    try:
+        docs = [(p, load(p)) for p in args.files]
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_drift: cannot load input: {e}", file=sys.stderr)
+        return 2
+
+    steps: List[Dict[str, Any]] = []
+    total = 0
+    for (pa, da), (pb, db) in zip(docs, docs[1:]):
+        findings = diff_pair(da, db)
+        total += len(findings)
+        steps.append({"before": pa, "after": pb, "drift": findings})
+        header = f"{pa} -> {pb}"
+        if not findings:
+            print(f"{header}: no drift beyond noise bands")
+            continue
+        print(f"{header}: {len(findings)} metric(s) drifted")
+        for f in findings:
+            rel = ("exact" if f["rel_change"] is None
+                   else f"{100 * f['rel_change']:.1f}% "
+                        f"(band {100 * f['band']:.0f}%)")
+            print(f"  {f['metric']}: {f['before']} -> {f['after']} "
+                  f"[{rel}]")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"steps": steps, "total_drifting": total}, f,
+                      indent=2)
+            f.write("\n")
+    return 1 if (args.strict and total) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
