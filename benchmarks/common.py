@@ -43,7 +43,7 @@ def run_engine(env_name, algo_name, engine, *, trajs=20, seed=0, tag="",
 
     env = make_env(env_name)
     rc = RunConfig(total_trajs=trajs, seed=seed, **rc_kw)
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: an NTP step must not skew this
     if engine.startswith("mf-"):
         pol = PolicyConfig(env.obs_dim, env.act_dim, hidden=48)
         tr = ModelFreeTrainer(env, pol, rc, algo=engine[3:])
@@ -56,7 +56,8 @@ def run_engine(env_name, algo_name, engine, *, trajs=20, seed=0, tag="",
         trace = eng(env, ens, algo, rc).run()
     out = {"env": env_name, "algo": algo_name, "engine": engine,
            "trajs": trajs, "seed": seed,
-           "real_seconds": round(time.time() - t0, 1), "trace": trace}
+           "real_seconds": round(time.perf_counter() - t0, 1),
+           "trace": trace}
     path.write_text(json.dumps(out, indent=1))
     return out
 

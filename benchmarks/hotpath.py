@@ -21,6 +21,10 @@ supposed to guarantee (and what the seed code violated):
 * with ``--env-farm``: vectorized env-farm scaling (ISSUE 6) — paced
   trajs/s at B=1,64,256 envs per collector (threads N=1,2 and procs),
   plus the raw unpaced batch-rollout rate. Rates only: never gated.
+* with ``--serve``: serving-tier latency/throughput (ISSUE 8) —
+  continuous-batching tokens/s, p50/p95 per-token latency, hot-swap
+  stall and the compile-count invariants (serve_* metrics, never
+  gated; the compile counts are exact-banded by tools/bench_drift.py).
 
 Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
 the repo root. With ``--check``, compares fresh numbers against the
@@ -501,6 +505,64 @@ def bench_env_farm(metrics, *, batch_sizes=(1, 64, 256),
     return metrics
 
 
+def bench_serve(metrics, *, n_requests=12, max_new=16):
+    """Serving-tier throughput/latency (ISSUE 8) — measure-only.
+
+    Streams a deterministic mix of prompt lengths through the
+    continuous-batching WorldModelServer with one live parameter push
+    mid-run. None of these metric names end in ``_us``, so they ride
+    ``tools/bench_drift.py``'s noise bands but never the 20% regression
+    gate; the ``*_compiles`` counts ARE exact-banded there (a compile
+    count has no noise), which pins the compile-once-under-churn
+    invariant into the committed artifact.
+    """
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.servers import ParameterServer
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import api as model_api
+    from repro.models import lm as LM
+    from repro.serve import WorldModelServer
+
+    cfg = get_config("glm4-9b", reduced=True)
+    ctx = model_api.shard_ctx(make_smoke_mesh())
+    k1, k2 = jax.random.split(jax.random.key(0))
+    ps = ParameterServer()
+    ps.push(LM.init_params(cfg, ctx, k1))
+    srv = WorldModelServer(cfg, param_server=ps, n_slots=4, max_seq=64,
+                           page_len=16, prompt_buckets=(16, 32))
+
+    rng = np.random.default_rng(0)
+    # warmup: one request per bucket compiles every serve program once
+    for b in srv.sched.buckets:
+        srv.submit(rng.integers(0, cfg.vocab_size, b), max_new=2)
+    srv.run()
+    srv.sched.tick_seconds.clear()
+    srv.swap_seconds.clear()
+
+    v2 = LM.init_params(cfg, ctx, k2)
+    for i in range(n_requests):
+        plen = int(rng.integers(4, srv.sched.buckets[-1] + 1))
+        srv.submit(rng.integers(0, cfg.vocab_size, plen), max_new=max_new)
+        srv.step()
+        if i == n_requests // 2:
+            ps.push(v2)  # a live training push mid-run
+    srv.run()
+
+    st = srv.stats()
+    _require(st["decode_compiles"] == 1, "serve decode retraced")
+    _require(st["hot_swaps"] == 1, "serve hot-swap not picked up")
+    _require(st["tokens_generated"] >= n_requests * max_new,
+             "serve dropped tokens")
+    metrics["serve_tokens_per_s"] = round(st["tokens_per_s"], 1)
+    metrics["serve_p50_ms_per_token"] = round(st["p50_ms_per_token"], 3)
+    metrics["serve_p95_ms_per_token"] = round(st["p95_ms_per_token"], 3)
+    metrics["serve_hotswap_stall_ms"] = round(st["hotswap_stall_ms"], 3)
+    metrics["serve_decode_compiles"] = st["decode_compiles"]
+    metrics["serve_prefill_compiles"] = st["prefill_compiles"]
+    return metrics
+
+
 def bench_sharded(metrics):
     """Role-sharded hot path, measured in a SUBPROCESS forced to 8 host
     devices (the parent keeps its single device, so the single-device
@@ -593,7 +655,8 @@ def _sharded_child() -> dict:
 
 def run_bench(*, sharded: bool = False,
               collect_scaling: bool = False,
-              env_farm: bool = False) -> dict:
+              env_farm: bool = False,
+              serve: bool = False) -> dict:
     metrics = {}
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
@@ -603,6 +666,8 @@ def run_bench(*, sharded: bool = False,
         bench_collect_scaling(metrics)
     if env_farm:
         bench_env_farm(metrics)
+    if serve:
+        bench_serve(metrics)
     if sharded:
         bench_sharded(metrics)
     return {
@@ -656,6 +721,11 @@ def main(argv=None) -> int:
                          "(N=1,2) and procs modes, plus the raw unpaced "
                          "batch-rollout rate (env_farm_* metrics, never "
                          "gated)")
+    ap.add_argument("--serve", action="store_true",
+                    help="also measure the serving tier: continuous-"
+                         "batching tokens/s, p50/p95 per-token latency, "
+                         "hot-swap stall and compile counts (serve_* "
+                         "metrics, never gated)")
     ap.add_argument("--sharded-child", action="store_true",
                     help=argparse.SUPPRESS)   # internal: see bench_sharded
     ap.add_argument("--out", default=str(BASELINE))
@@ -667,7 +737,8 @@ def main(argv=None) -> int:
 
     fresh = run_bench(sharded=args.sharded,
                       collect_scaling=args.collect_scaling,
-                      env_farm=args.env_farm)
+                      env_farm=args.env_farm,
+                      serve=args.serve)
     for k, v in fresh["metrics"].items():
         print(f"hotpath/{k},{v}")
 
@@ -706,7 +777,8 @@ def main(argv=None) -> int:
         # drop their committed metrics: carry them over untouched
         skipped = [p for p, ran in (("collect_scaling_",
                                      args.collect_scaling),
-                                    ("env_farm_", args.env_farm))
+                                    ("env_farm_", args.env_farm),
+                                    ("serve_", args.serve))
                    if not ran]
         old = json.loads(out.read_text()).get("metrics", {})
         for k, v in old.items():

@@ -4,6 +4,12 @@ This is the policy-improvement worker's consumption pattern scaled down:
 prefill a batch of observation-history prompts, then autoregressively
 decode continuations with the KV cache — the same prefill/decode steps the
 production dry-run lowers at (32, 32768) / (128, 32768).
+
+This lock-step flow (one batch in, the whole batch decodes in unison) is
+the pedagogical baseline; the production path is the continuous-batching
+serve tier in ``repro.serve`` (``python -m repro.serve``), which admits
+and retires requests mid-flight and hot-swaps weights from a live
+ParameterServer.
 """
 import time
 
@@ -25,19 +31,18 @@ def main():
     dec = api.build(cfg, mesh, InputShape("d", PROMPT + GEN, BATCH,
                                           "decode"))
     mod = api._mod(cfg)
-    key = jax.random.key(0)
-    params = mod.init_params(cfg, pre.ctx, key)
+    # independent streams for weights and request tokens (reusing one key
+    # would correlate the served prompts with the model init)
+    key_params, key_prompts = jax.random.split(jax.random.key(0))
+    params = mod.init_params(cfg, pre.ctx, key_params)
 
     # batched requests (token prompts)
-    prompts = jax.random.randint(key, (BATCH, PROMPT), 0, cfg.vocab_size)
+    prompts = jax.random.randint(key_prompts, (BATCH, PROMPT), 0,
+                                 cfg.vocab_size)
     t0 = time.perf_counter()
     logits, cache = pre.fn(params, {"tokens": prompts})
-    # grow the cache to the decode bundle's length
-    want = dec.abstract_args[1]["k"].shape[2]
-    pad = want - cache["k"].shape[2]
-    cache["k"] = jnp.pad(cache["k"], ((0, 0),) * 2 + ((0, pad),) + ((0, 0),) * 2)
-    cache["v"] = jnp.pad(cache["v"], ((0, 0),) * 2 + ((0, pad),) + ((0, 0),) * 2)
-    cache["pos"] = jnp.pad(cache["pos"], (0, pad), constant_values=-1)
+    # grow the cache to the decode bundle's length (pos pads with -1=empty)
+    cache = api.grow_cache(cache, dec.abstract_args[1]["k"].shape[2])
     t_prefill = time.perf_counter() - t0
 
     tok = jnp.argmax(logits[:, :cfg.vocab_size], -1)[:, None].astype(jnp.int32)

@@ -60,14 +60,15 @@ def main():
     print(f"world model {cfg.name}: {n/1e6:.1f}M params")
     opt = adam(3e-3)
     opt_state = opt.init(params)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(args.steps):
         key, k = jax.random.split(key)
         batch = synth_batch(k, args.batch, args.seq, cfg.vocab_size)
         params, opt_state, m = bundle.fn(params, opt_state, batch)
         if step % max(args.steps // 10, 1) == 0 or step == args.steps - 1:
             print(f"step {step:4d}  loss {float(m['loss']):.4f}  "
-                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+                  f"({(time.perf_counter()-t0)/(step+1):.2f}s/step)",
+                  flush=True)
     print("final loss should approach 0 — the dynamics are deterministic.")
 
 

@@ -216,12 +216,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                 kw["ws_moe"] = True
             if shape.kind == "decode":
                 kw["kv_int8"] = True
-        t0 = time.time()
+        t0 = time.perf_counter()  # monotonic: NTP steps must not skew
         bundle = api.build(cfg, mesh, shape, **kw)
         lowered = bundle.fn.lower(*bundle.abstract_args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
         rec.update(ok=True, optimized=optimized, lower_s=round(t_lower, 1),
                    compile_s=round(t_compile, 1),
                    num_microbatches=bundle.num_microbatches,

@@ -86,10 +86,11 @@ def run_mbrl(args):
         "partial-data": lambda: PartialAsyncDataPolicy(env, ens, algo, rc),
     }
     tr = engines[args.engine]()
-    t0 = time.time()
+    t0 = time.perf_counter()  # monotonic: an NTP step must not skew this
     trace = tr.run()
     out = {"engine": args.engine, "algo": args.algo, "env": args.env,
-           "real_seconds": round(time.time() - t0, 1), "trace": trace}
+           "real_seconds": round(time.perf_counter() - t0, 1),
+           "trace": trace}
     if getattr(tr, "roles", None) is not None:
         out["roles"] = tr.roles.describe()
     if getattr(tr, "collectors", None) is not None:

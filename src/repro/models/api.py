@@ -19,6 +19,7 @@ from repro.models import encdec as E
 from repro.models import lm as LM
 from repro.models.config import InputShape, ModelConfig, ShardCtx
 from repro.optim.optimizers import adam
+from repro.utils.jit_stats import trace_counted
 
 
 def shard_ctx(mesh, *, fsdp: bool = False, rs_ag: bool = False,
@@ -209,5 +210,117 @@ def build(cfg: ModelConfig, mesh, shape: InputShape, *, fsdp: bool = False,
     fn = jax.jit(gfn, in_shardings=_ns(mesh, in_specs),
                  out_shardings=_ns(mesh, out_specs), donate_argnums=(1,))
     return StepBundle("decode", fn, (params_abs, cache_abs, token_abs),
+                      _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
+                      shape)
+
+
+# --------------------------------------------------------------------------
+# serve tier (repro.serve): cache growth + per-slot bundles
+
+
+def grow_cache(cache, to_len: int):
+    """Grow a decode KV cache's sequence capacity to ``to_len`` slots.
+
+    Replaces the hand-rolled ``jnp.pad`` dance in the serving example:
+    ``k``/``v`` (and int8 scales when present) gain zero slots on the
+    sequence axis while ``pos`` gains EMPTY (-1) slots — a 0-padded pos
+    would alias global position 0 and corrupt the attention mask, which
+    is precisely the easy-to-miss bug this helper exists to prevent.
+    Handles both the lock-step layout (pos ``(S,)``) and the serve
+    slot-pool layout (pos ``(B, S)``). Returns a shallow copy; no-op
+    values when already at ``to_len``.
+    """
+    if "k" not in cache or "pos" not in cache:
+        raise ValueError("grow_cache needs an attention KV cache "
+                         "(ssm/hybrid state caches have no seq capacity)")
+    cur = cache["k"].shape[2]
+    if to_len < cur:
+        raise ValueError(f"grow_cache cannot shrink the cache "
+                         f"({cur} -> {to_len})")
+    pad = to_len - cur
+    out = dict(cache)
+    if pad == 0:
+        return out
+    for key in ("k", "v", "k_scale", "v_scale"):
+        if key in cache:
+            a = cache[key]
+            out[key] = jnp.pad(a, ((0, 0),) * 2 + ((0, pad),)
+                               + ((0, 0),) * (a.ndim - 3))
+    p = cache["pos"]
+    out["pos"] = jnp.pad(p, ((0, 0),) * (p.ndim - 1) + ((0, pad),),
+                         constant_values=-1)
+    return out
+
+
+def build_serve_prefill(cfg: ModelConfig, mesh, global_batch: int,
+                        seq_len: int, *, check_vma: bool = False
+                        ) -> StepBundle:
+    """Serve-tier prefill of ONE admission bucket at fixed shapes.
+
+    ``bundle.fn(params, batch, prompt_len)`` -> (per-row last-REAL-token
+    logits, slot-layout cache); ``prompt_len`` is (B,) int32 so shorter
+    prompts right-pad into the bucket without retracing. ``fn`` is a
+    TraceCounted jit: the serve tier asserts its compile-once-per-bucket
+    invariant through ``utils.jit_stats``.
+    """
+    ctx = shard_ctx(mesh)
+    cfg.validate(ctx)
+    pspecs = LM.param_specs(cfg, ctx)
+    params_abs = jax.eval_shape(
+        lambda k: LM.init_params(cfg, ctx, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    B, S = global_batch, seq_len
+    shape = InputShape(f"serve-prefill-{S}", S, B, "prefill")
+    dp = _dp_spec_axis(ctx) if B % ctx.dp_size == 0 and B >= ctx.dp_size \
+        else None
+    batch_abs, bspecs = batch_struct(cfg, shape, ctx)
+    local = LM.make_prefill_slots(cfg, ctx, B, S)
+    cspecs = LM.cache_specs_slots(cfg, ctx, B, S)
+    in_specs = (pspecs, bspecs, P(dp))
+    out_specs = (P(dp, None), cspecs)
+    gfn = _shard_map(local, mesh, in_specs, out_specs, check_vma)
+    fn = trace_counted(gfn, in_shardings=_ns(mesh, in_specs),
+                       out_shardings=_ns(mesh, out_specs))
+    plen_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return StepBundle("serve_prefill", fn,
+                      (params_abs, batch_abs, plen_abs),
+                      _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
+                      shape)
+
+
+def build_serve_decode(cfg: ModelConfig, mesh, n_slots: int, seq_len: int,
+                       *, check_vma: bool = False) -> StepBundle:
+    """Serve-tier continuous-batching decode: one compiled program at
+    (n_slots, seq_len) forever; requests stream through it.
+
+    ``bundle.fn(params, cache, token, active)`` -> (logits, cache');
+    the cache is donated (ring-buffer style in-place churn). ``fn`` is a
+    TraceCounted jit so the no-retrace-under-churn invariant is
+    assertable.
+    """
+    ctx = shard_ctx(mesh)
+    cfg.validate(ctx)
+    pspecs = LM.param_specs(cfg, ctx)
+    params_abs = jax.eval_shape(
+        lambda k: LM.init_params(cfg, ctx, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    B, S = n_slots, seq_len
+    shape = InputShape(f"serve-decode-{S}", S, B, "decode")
+    dp = _dp_spec_axis(ctx) if B % ctx.dp_size == 0 and B >= ctx.dp_size \
+        else None
+    local = LM.make_decode_slots(cfg, ctx, B, S)
+    cache_abs = jax.eval_shape(
+        functools.partial(LM.init_cache_slots, cfg, ctx, B, S))
+    cspecs = LM.cache_specs_slots(cfg, ctx, B, S)
+    token_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    active_abs = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    in_specs = (pspecs, cspecs, P(dp, None), P(dp))
+    out_specs = (P(dp, None), cspecs)
+    gfn = _shard_map(local, mesh, in_specs, out_specs, check_vma)
+    fn = trace_counted(gfn, in_shardings=_ns(mesh, in_specs),
+                       out_shardings=_ns(mesh, out_specs),
+                       donate_argnums=(1,))
+    return StepBundle("serve_decode", fn,
+                      (params_abs, cache_abs, token_abs, active_abs),
                       _ns(mesh, in_specs), _ns(mesh, out_specs), ctx, cfg,
                       shape)

@@ -400,7 +400,8 @@ def attn_decode(cfg: ModelConfig, ctx: ShardCtx, p, x, k_cache, v_cache,
 
 
 def _masked_decode(q, k_cache, v_cache, valid):
-    """q: (B, Hq, hd); caches (B, S, KV, hd); valid: (S,) bool.
+    """q: (B, Hq, hd); caches (B, S, KV, hd); valid: (S,) bool shared
+    across the batch (lock-step decode) or (B, S) per-row (slot decode).
 
     Returns locally-normalised output and the local logsumexp.
     """
@@ -410,7 +411,9 @@ def _masked_decode(q, k_cache, v_cache, valid):
     qf = q.astype(jnp.float32).reshape(B, Hkv, G, D)
     s = jnp.einsum("bhgd,bkhd->bhgk", qf,
                    k_cache.astype(jnp.float32)) * (D ** -0.5)
-    s = jnp.where(valid[None, None, None], s, -1e30)
+    mask = valid[None, None, None] if valid.ndim == 1 \
+        else valid[:, None, None]
+    s = jnp.where(mask, s, -1e30)
     m = s.max(-1)
     pexp = jnp.exp(s - m[..., None])
     den = pexp.sum(-1)
@@ -418,6 +421,59 @@ def _masked_decode(q, k_cache, v_cache, valid):
     lse = m + jnp.log(jnp.maximum(den, 1e-30))
     o = o / jnp.maximum(den[..., None], 1e-30)
     return o.reshape(B, Hq, D), lse.reshape(B, Hq)
+
+
+def attn_decode_slots(cfg: ModelConfig, ctx: ShardCtx, p, x, k_cache,
+                      v_cache, cache_pos, index, active, mode):
+    """Per-SLOT single-token decode for the continuous-batching serve tier.
+
+    Unlike :func:`attn_decode` (one scalar ``index`` marching the whole
+    batch in lock step) every batch row here is an independent request:
+    ``index`` is ``(B,)`` per-row token counts, ``cache_pos`` is
+    ``(B, S_loc)`` and ``active`` is a ``(B,)`` bool mask. Inactive rows
+    scatter to an out-of-range target that ``mode="drop"`` discards (the
+    ReplayBuffer ring-write idiom), so retired/empty slots cost compute
+    but can never corrupt cache state. Layout support is deliberately the
+    serve subset: kind "A", unsharded sequence axis, fp KV, no window.
+    """
+    if mode["seq_axes"]:
+        raise ValueError("attn_decode_slots: sequence-sharded KV caches "
+                         "are not supported")
+    if mode["kind"] != "A":
+        raise ValueError("attn_decode_slots: unsupported cache layout "
+                         f"kind {mode['kind']!r} (need 'A')")
+    B = x.shape[0]
+    hp, h_loc, kv_sharded, kv_loc = head_layout(cfg, ctx)
+    h = rmsnorm(x, p["ln"])
+    hd = cfg.hd
+    q = matmul(h, p["wq"]).reshape(B, 1, h_loc, hd)
+    k = matmul(h, p["wk"]).reshape(B, 1, -1, hd)
+    v = matmul(h, p["wv"]).reshape(B, 1, -1, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    pos_b = index[:, None]  # (B, 1): each row rotates at its own position
+    q = rope(q, pos_b, cfg.rope_theta)
+    k = rope(k, pos_b, cfg.rope_theta)
+
+    if not kv_sharded:
+        g = hp // cfg.num_kv_heads
+        kvh = jnp.minimum((tp_index(ctx) * h_loc) // g, cfg.num_kv_heads - 1)
+        k = jax.lax.dynamic_slice_in_dim(k, kvh, 1, axis=2)
+        v = jax.lax.dynamic_slice_in_dim(v, kvh, 1, axis=2)
+
+    S_loc = k_cache.shape[1]
+    row = jnp.arange(B)
+    tgt = jnp.where(active, index, S_loc)
+    k_cache = k_cache.at[row, tgt].set(k[:, 0], mode="drop")
+    v_cache = v_cache.at[row, tgt].set(v[:, 0], mode="drop")
+    cache_pos = cache_pos.at[row, tgt].set(index, mode="drop")
+
+    valid = (cache_pos >= 0) & (cache_pos <= index[:, None])  # (B, S_loc)
+    o, _ = _masked_decode(q[:, 0], k_cache, v_cache, valid)
+    o = matmul(o.reshape(B, 1, -1).astype(x.dtype), p["wo"])
+    o = psum_tp(o, ctx)
+    return x + o, k_cache, v_cache, cache_pos
 
 
 # --------------------------------------------------------------------------

@@ -728,3 +728,133 @@ def make_decode(cfg: ModelConfig, ctx: ShardCtx, global_batch: int,
         return logits, new_cache
 
     return decode
+
+
+# --------------------------------------------------------------------------
+# per-slot cache (continuous-batching serve tier)
+#
+# The lock-step decode above shares ONE scalar ``index`` and one (S,)
+# ``pos`` across the whole batch — every request must start and stop
+# together. The serve tier instead treats each batch row as an
+# independent SLOT at its own position, so requests stream through a
+# single compiled decode program (repro.serve).
+
+
+def _slot_mode(cfg: ModelConfig, ctx: ShardCtx, n_slots: int,
+               seq_len: int):
+    """decode_mode restricted to the layouts the serve tier supports:
+    attention KV families, fp cache, kind "A", no sliding window. When
+    the slot count does not divide dp the cache is replicated instead of
+    seq-sharded (serve keeps state batch-resident)."""
+    if _block_kind(cfg) not in ("dense", "moe"):
+        raise ValueError(
+            f"serve tier needs an attention KV cache; family "
+            f"{cfg.family!r} has none (ssm/hybrid state is lock-step only)")
+    if cfg.attn_window:
+        raise ValueError("serve tier does not support sliding-window "
+                         "(ring) caches")
+    if getattr(ctx, "kv_int8", False):
+        raise ValueError("serve tier does not support int8 KV caches")
+    mode = L.decode_mode(cfg, ctx, n_slots, seq_len)
+    if mode["kind"] != "A":
+        raise ValueError(
+            f"serve tier needs a kind-'A' cache (num_kv_heads divisible "
+            f"by tp), got kind {mode['kind']!r}")
+    if mode["seq_axes"]:
+        mode = dict(mode, seq_axes=(), s_cache=seq_len + 1)
+    return mode
+
+
+def init_cache_slots(cfg: ModelConfig, ctx: ShardCtx, n_slots: int,
+                     seq_len: int):
+    """GLOBAL slot-pool cache (all slots empty): per-slot ``index`` (B,)
+    token counts and ``pos`` (B, s_cache) position maps (-1 empty)."""
+    mode = _slot_mode(cfg, ctx, n_slots, seq_len)
+    dt = jnp.dtype(cfg.dtype)
+    s_c = mode["s_cache"]
+    k = jnp.zeros((cfg.num_layers, n_slots, s_c, cfg.num_kv_heads, cfg.hd),
+                  dt)
+    return {"index": jnp.zeros((n_slots,), jnp.int32),
+            "k": k, "v": jnp.zeros_like(k),
+            "pos": jnp.full((n_slots, s_c), -1, jnp.int32)}
+
+
+def cache_specs_slots(cfg: ModelConfig, ctx: ShardCtx, n_slots: int,
+                      seq_len: int):
+    mode = _slot_mode(cfg, ctx, n_slots, seq_len)
+    dp = tuple(ctx.dp_axes) if len(ctx.dp_axes) > 1 else ctx.dp_axes[0]
+    b_ax = dp if mode["batch_dp"] else None
+    kv_ax = ctx.tp_axis if cfg.num_kv_heads % ctx.tp_size == 0 else None
+    kv_spec = P(None, b_ax, None, kv_ax, None)
+    return {"index": P(b_ax), "k": kv_spec, "v": kv_spec,
+            "pos": P(b_ax, None)}
+
+
+def make_prefill_slots(cfg: ModelConfig, ctx: ShardCtx, global_batch: int,
+                       seq_len: int):
+    """Prefill one serve admission bucket (fixed shapes, per-row prompt
+    lengths). Two differences from make_prefill make right-padded prompts
+    decode correctly: logits come from each row's LAST REAL token
+    (``prompt_len - 1``, not ``seq_len - 1``), and cache positions at and
+    after the prompt are marked empty (-1) so the padding's KV is never
+    attended. Causality already keeps the real tokens' KV independent of
+    the padding to their right."""
+    mode = _slot_mode(cfg, ctx, global_batch, seq_len)
+
+    def prefill(params, batch, prompt_len):
+        x, positions = embed_inputs(cfg, ctx, params, batch)
+        h, _, (k, v) = stack_forward(cfg, ctx, params, x, positions,
+                                     collect_cache=True)
+        S_ = x.shape[1]
+        last = jnp.clip(prompt_len - 1, 0, S_ - 1)
+        h_last = jnp.take_along_axis(h, last[:, None, None], axis=1)[:, 0]
+        logits = L.lm_logits_last(cfg, ctx, params["embed"], h_last)
+        s_c = mode["s_cache"]
+        pad = s_c - S_
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        posarr = jnp.arange(s_c, dtype=jnp.int32)[None, :]
+        posarr = jnp.where(posarr < prompt_len[:, None], posarr, -1)
+        cache = {"index": prompt_len.astype(jnp.int32),
+                 "k": kp, "v": vp, "pos": posarr}
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_slots(cfg: ModelConfig, ctx: ShardCtx, n_slots: int,
+                      seq_len: int):
+    """Continuous-batching decode: ONE new token for every ACTIVE slot.
+
+    ``cache`` is the slot-pool layout of :func:`init_cache_slots`,
+    ``token`` is (n_slots, 1) pending tokens and ``active`` is (n_slots,)
+    bool. Inactive slots are computed but never written (drop-mode
+    scatter), so admissions and retirements between calls never change
+    shapes — the step compiles exactly once per (n_slots, seq_len)."""
+    mode = _slot_mode(cfg, ctx, n_slots, seq_len)
+    kind = _block_kind(cfg)
+
+    def decode(params, cache, token, active):
+        index = cache["index"]
+        x = L.embed_tokens(cfg, ctx, params["embed"], token)
+
+        def body(carry, xs):
+            h, pos = carry
+            lp, kc, vc = xs
+            h, kc, vc, pos = L.attn_decode_slots(
+                cfg, ctx, lp["attn"], h, kc, vc, pos, index, active, mode)
+            if kind == "moe":
+                h, _ = M.moe_forward(cfg, ctx, lp["moe"], h)
+            else:
+                h = L.mlp_forward(cfg, ctx, lp["mlp"], h)
+            return (h, pos), (kc, vc)
+
+        (h, pos), (ks, vs) = jax.lax.scan(
+            body, (x, cache["pos"]),
+            (params["layers"], cache["k"], cache["v"]))
+        logits = L.lm_logits_last(cfg, ctx, params["embed"], h[:, 0])
+        new_cache = dict(cache, k=ks, v=vs, pos=pos,
+                         index=index + active.astype(jnp.int32))
+        return logits, new_cache
+
+    return decode

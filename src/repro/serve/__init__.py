@@ -1,0 +1,20 @@
+"""World-model serving tier: continuous batching + paged KV cache +
+live hot-swap.
+
+The training fleet's async contract extended to inference: the server is
+just another ``ParameterServer.pull_if_newer`` consumer, so the fleet
+trains while serving picks up each push with zero downtime and zero
+copies on unchanged versions.
+
+    submit() -> RequestQueue (bounded, BackpressureError)
+            -> Scheduler (continuous batching over a PagedKVPool)
+            -> pull_if_newer (hot-swap between decode ticks)
+
+See README "Serving" and ROADMAP "Serving-tier invariants (PR 8)".
+"""
+from repro.serve.kv_pool import PagedKVPool
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.server import RequestQueue, WorldModelServer
+
+__all__ = ["PagedKVPool", "Request", "RequestQueue", "Scheduler",
+           "WorldModelServer"]

@@ -1,0 +1,123 @@
+"""Paged KV pool: static-shape slot storage + page-ledger admission.
+
+Two layers, deliberately separated:
+
+* STORAGE is slot-dense and compile-once — one cache pytree allocated at
+  ``(n_slots, max_seq)`` via ``lm.init_cache_slots`` and mutated only by
+  jitted donating updates (the ReplayBuffer static-shape idiom: shapes
+  never change as requests churn, so nothing ever retraces). Admission
+  scatters a prefilled single-request cache into a slot row — one
+  compile per prompt bucket, counted.
+
+* ACCOUNTING is paged — a fixed pool of ``n_pages`` pages of
+  ``page_len`` token slots each. A request must hold
+  ``ceil((prompt + max_new) / page_len)`` pages for its whole lifetime
+  before it may occupy a slot, and retirement returns them. This makes
+  admission memory-bounded (a request can be refused on page exhaustion
+  even with slots free) and conservation checkable:
+  ``free + held == n_pages`` always.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as LM
+from repro.models.api import grow_cache
+from repro.utils.jit_stats import trace_counted
+
+
+def _admit_update(pool, pre, slot):
+    """Scatter one prefilled request cache (B=1, any bucket length) into
+    pool slot ``slot``. The bucket cache is grown to pool capacity
+    INSIDE the jit (static pad), and every per-slot field — k, v, pos,
+    index — is fully overwritten, so no stale tenant state survives an
+    admission."""
+    pre = grow_cache(pre, pool["k"].shape[2])
+    out = dict(pool)
+    out["k"] = jax.lax.dynamic_update_slice(
+        pool["k"], pre["k"].astype(pool["k"].dtype), (0, slot, 0, 0, 0))
+    out["v"] = jax.lax.dynamic_update_slice(
+        pool["v"], pre["v"].astype(pool["v"].dtype), (0, slot, 0, 0, 0))
+    out["pos"] = jax.lax.dynamic_update_slice(pool["pos"], pre["pos"],
+                                              (slot, 0))
+    out["index"] = jax.lax.dynamic_update_slice(pool["index"],
+                                                pre["index"], (slot,))
+    return out
+
+
+class PagedKVPool:
+    """Fixed page pool + per-request page tables over slot-dense storage.
+
+    ``cache`` is the live decode cache pytree (handed to / returned by
+    the serve decode bundle each tick, donated both ways). Slots and
+    pages are host-side bookkeeping; the device arrays never reshape.
+    """
+
+    def __init__(self, cfg, ctx, *, n_slots: int, max_seq: int,
+                 page_len: int = 16, n_pages: int = None,
+                 cache_shardings=None):
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.page_len = int(page_len)
+        self.cache = LM.init_cache_slots(cfg, ctx, n_slots, max_seq)
+        if cache_shardings is not None:
+            self.cache = jax.device_put(self.cache, cache_shardings)
+        self.s_cache = self.cache["k"].shape[2]
+        full = n_slots * self.pages_for(self.s_cache)
+        self.n_pages = full if n_pages is None else int(n_pages)
+        self._free_pages = list(range(self.n_pages))
+        self._free_slots = list(range(n_slots))
+        self._page_table: Dict[int, Tuple[int, ...]] = {}
+        jit_kw = {"donate_argnums": (0,)}
+        if cache_shardings is not None:
+            jit_kw["out_shardings"] = cache_shardings
+        self._admit = trace_counted(_admit_update, **jit_kw)
+
+    def pages_for(self, tokens: int) -> int:
+        return -(-int(tokens) // self.page_len)
+
+    def can_admit(self, budget_tokens: int) -> bool:
+        """One free slot AND enough free pages for the request's whole
+        token budget (prompt + max_new) — held until retirement."""
+        return (bool(self._free_slots)
+                and self.pages_for(budget_tokens) <= len(self._free_pages))
+
+    def admit(self, pre_cache, budget_tokens: int) -> int:
+        """Claim a slot + pages and scatter the prefilled cache in.
+        Returns the slot id. Callers check :meth:`can_admit` first."""
+        if budget_tokens > self.s_cache:
+            raise ValueError(
+                f"request budget {budget_tokens} tokens exceeds pool "
+                f"capacity {self.s_cache}")
+        need = self.pages_for(budget_tokens)
+        if not self._free_slots:
+            raise RuntimeError("no free decode slot")
+        if need > len(self._free_pages):
+            raise RuntimeError(
+                f"page pool exhausted: need {need}, "
+                f"free {len(self._free_pages)}/{self.n_pages}")
+        slot = self._free_slots.pop(0)
+        self._page_table[slot] = tuple(self._free_pages[:need])
+        del self._free_pages[:need]
+        self.cache = self._admit(self.cache, pre_cache,
+                                 jnp.asarray(slot, jnp.int32))
+        return slot
+
+    def retire(self, slot: int) -> None:
+        """Free a slot's pages. Storage needs no cleanup: the slot row is
+        fully overwritten by the next admission, and the decode step's
+        drop-mode scatter never writes inactive slots."""
+        self._free_pages.extend(self._page_table.pop(slot))
+        self._free_slots.append(slot)
+
+    def accounting(self) -> Tuple[int, int]:
+        """(free_pages, held_pages); their sum must equal n_pages."""
+        held = sum(len(p) for p in self._page_table.values())
+        return len(self._free_pages), held
+
+    @property
+    def admit_compiles(self) -> int:
+        return self._admit.trace_count

@@ -1,0 +1,309 @@
+"""Serving-tier tests (PR 8): continuous batching, paged KV pool,
+live hot-swap, and the api.grow_cache helper.
+
+The contracts asserted here are the ROADMAP "Serving-tier invariants":
+
+* compile-once under churn — with requests admitted/retired
+  continuously, the decode program traces exactly once and prefill/admit
+  trace at most once per prompt bucket (counted via utils.jit_stats);
+* FIFO admission with head-of-line blocking — admission order is
+  submission order, and a request that does not fit (slot- or
+  page-starved) blocks everything behind it;
+* page conservation — free + held pages == n_pages at every step;
+* request isolation — a request's tokens are identical whether it is
+  served alone or with co-tenant slots churning next to it;
+* hot-swap correctness — a mid-decode push is picked up on the next
+  tick (verified against a manual mixed-version replay through the SAME
+  compiled functions), post-swap requests match a fresh server started
+  at the new version, and the unchanged-version pull performs zero
+  transfers (jax.transfer_guard('disallow')).
+"""
+import importlib.util
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.servers import BackpressureError, ParameterServer
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import api
+from repro.models import lm as LM
+from repro.models.config import InputShape
+from repro.serve import RequestQueue, WorldModelServer
+from repro.serve.kv_pool import _admit_update
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("glm4-9b", reduced=True)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_smoke_mesh()
+
+
+@pytest.fixture(scope="module")
+def params_v1(cfg, mesh):
+    return LM.init_params(cfg, api.shard_ctx(mesh), jax.random.key(1))
+
+
+@pytest.fixture(scope="module")
+def params_v2(cfg, mesh):
+    return LM.init_params(cfg, api.shard_ctx(mesh), jax.random.key(2))
+
+
+@pytest.fixture(scope="module")
+def server(cfg, params_v1):
+    """Shared small server: 2 slots, buckets (8, 16), 8-token pages."""
+    return WorldModelServer(cfg, params=params_v1, n_slots=2, max_seq=32,
+                            page_len=8, prompt_buckets=(8, 16))
+
+
+def _prompt(cfg, n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+# -- grow_cache (satellite: replaces the example's hand-rolled pad) --------
+
+
+def test_grow_cache_matches_manual_pad():
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(2, 3, 4, 2, 5)).astype(np.float32))
+    cache = {"index": jnp.asarray(4, jnp.int32), "k": k,
+             "v": k * 2, "pos": jnp.asarray([0, 1, 2, 3], jnp.int32),
+             "k_scale": jnp.ones((2, 3, 4, 2, 1), jnp.float32),
+             "v_scale": jnp.ones((2, 3, 4, 2, 1), jnp.float32)}
+    out = api.grow_cache(cache, 7)
+    pad5 = ((0, 0),) * 2 + ((0, 3),) + ((0, 0),) * 2
+    np.testing.assert_array_equal(out["k"], jnp.pad(k, pad5))
+    np.testing.assert_array_equal(out["v"], jnp.pad(k * 2, pad5))
+    assert out["k_scale"].shape == (2, 3, 7, 2, 1)
+    # THE bug this helper prevents: pos pads with -1 (empty), never 0
+    np.testing.assert_array_equal(
+        out["pos"], jnp.asarray([0, 1, 2, 3, -1, -1, -1], jnp.int32))
+    assert out["index"] == 4
+
+    # per-slot (B, S) pos layout pads the last axis the same way
+    slot = {"index": jnp.asarray([2], jnp.int32), "k": k[:, :1],
+            "v": k[:, :1], "pos": jnp.asarray([[0, 1, -1, -1]], jnp.int32)}
+    out2 = api.grow_cache(slot, 6)
+    np.testing.assert_array_equal(
+        out2["pos"], jnp.asarray([[0, 1, -1, -1, -1, -1]], jnp.int32))
+
+    same = api.grow_cache(cache, 4)  # no-op at current capacity
+    assert same["k"] is cache["k"]
+    with pytest.raises(ValueError, match="shrink"):
+        api.grow_cache(cache, 3)
+    with pytest.raises(ValueError, match="attention"):
+        api.grow_cache({"ssm": k, "index": 0}, 8)
+
+
+# -- model layer: per-slot programs match the lock-step reference ----------
+
+
+def test_slot_decode_matches_lockstep(cfg, mesh, params_v1):
+    B, PLEN, GEN = 2, 8, 4
+    pre_s = api.build_serve_prefill(cfg, mesh, B, PLEN)
+    dec_s = api.build_serve_decode(cfg, mesh, B, PLEN + GEN + 1)
+    pre_l = api.build(cfg, mesh, InputShape("p", PLEN, B, "prefill"))
+    dec_l = api.build(cfg, mesh,
+                      InputShape("d", PLEN + GEN + 1, B, "decode"))
+    prompts = jnp.asarray(
+        np.stack([_prompt(cfg, PLEN, s) for s in (3, 4)]))
+
+    lg_s, c_s = pre_s.fn(params_v1, {"tokens": prompts},
+                         jnp.full((B,), PLEN, jnp.int32))
+    lg_l, c_l = pre_l.fn(params_v1, {"tokens": prompts})
+    # full-bucket prompts: per-row last-real-token == last-token logits
+    np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_l),
+                               atol=1e-2, rtol=1e-3)
+    c_s = api.grow_cache(c_s, dec_s.abstract_args[1]["k"].shape[2])
+    c_l = api.grow_cache(c_l, dec_l.abstract_args[1]["k"].shape[2])
+
+    tok = jnp.argmax(lg_s[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    tok_l = jnp.argmax(lg_l[:, :cfg.vocab_size], -1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_l))
+    active = jnp.ones((B,), jnp.bool_)
+    for _ in range(GEN):
+        lg_s, c_s = dec_s.fn(params_v1, c_s, tok[:, None], active)
+        lg_l, c_l = dec_l.fn(params_v1, c_l, tok[:, None])
+        tok = jnp.argmax(lg_s[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        tok_l = jnp.argmax(lg_l[:, :cfg.vocab_size], -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok), np.asarray(tok_l))
+        np.testing.assert_allclose(np.asarray(lg_s), np.asarray(lg_l),
+                                   atol=1e-2, rtol=1e-3)
+
+
+def test_serve_rejects_stateless_cache_families(mesh):
+    ssm = get_config("mamba2-2.7b", reduced=True)
+    with pytest.raises(ValueError, match="attention KV cache"):
+        api.build_serve_decode(ssm, mesh, 2, 32)
+
+
+# -- continuous batching: isolation, FIFO, no-retrace under churn ----------
+
+
+def test_request_isolation_under_cotenancy(cfg, server):
+    """Same request, same server: tokens identical served alone vs with
+    co-tenant slots churning next to it (row independence of the single
+    compiled decode program)."""
+    prompt = _prompt(cfg, 6, 10)
+    rid_alone = server.submit(prompt, max_new=5)
+    server.run()
+    alone = server.result(rid_alone)
+    assert alone.shape == (5,)
+
+    rid_again = server.submit(prompt, max_new=5)
+    server.step()  # admits rid_again into slot 0, decodes one token
+    rid_b = server.submit(_prompt(cfg, 13, 11), max_new=4)
+    rid_c = server.submit(_prompt(cfg, 3, 12), max_new=6)
+    server.run()
+    np.testing.assert_array_equal(server.result(rid_again), alone)
+    assert server.result(rid_b).shape == (4,)
+    assert server.result(rid_c).shape == (6,)
+
+
+def test_churn_fifo_no_retrace_page_conservation(cfg, server):
+    """A stream of mixed-size requests churning through 2 slots: FIFO
+    admission, compile counts pinned at their bucket caps, and page
+    accounting conserved at every step."""
+    start_order = len(server.sched.admit_order)
+    rids = []
+    specs = [(3, 4), (8, 3), (11, 5), (5, 2), (16, 4), (2, 6), (9, 3),
+             (7, 5)]
+    for i, (plen, new) in enumerate(specs):
+        rids.append(server.submit(_prompt(cfg, plen, 20 + i), max_new=new))
+        if i % 3 == 2:  # interleave serving with submission
+            server.step()
+        free, held = server.sched.pool.accounting()
+        assert free + held == server.sched.pool.n_pages
+    while server.pending:
+        server.step()
+        free, held = server.sched.pool.accounting()
+        assert free + held == server.sched.pool.n_pages
+
+    # FIFO: admission order == submission order (head-of-line blocking)
+    assert server.sched.admit_order[start_order:] == rids
+    for rid, (_, new) in zip(rids, specs):
+        assert server.result(rid).shape == (new,)
+    # compile-once under churn: everything pinned at its fixed-shape cap
+    cc = server.sched.compile_counts()
+    assert cc["decode"] == 1, cc
+    assert cc["prefill"] <= len(server.sched.buckets), cc
+    assert cc["admit"] <= len(server.sched.buckets), cc
+    free, held = server.sched.pool.accounting()
+    assert (free, held) == (server.sched.pool.n_pages, 0)
+
+
+def test_backpressure_and_submit_validation(cfg, server):
+    q = RequestQueue(maxsize=2, submit_timeout=0.0)
+    q.submit("a")
+    q.submit("b")
+    with pytest.raises(BackpressureError, match="decode loop"):
+        q.submit("c")
+    assert q.pop() == "a" and q.pop() == "b"  # FIFO
+
+    # server-side validation refuses requests that can NEVER be served
+    with pytest.raises(ValueError, match="largest.*bucket"):
+        server.submit(_prompt(cfg, 17, 0), max_new=2)
+    with pytest.raises(ValueError, match="capacity"):
+        server.submit(_prompt(cfg, 16, 0), max_new=100)
+    with pytest.raises(ValueError, match="empty"):
+        server.submit([], max_new=2)
+
+    # and through the server: a full queue sheds load with the same error
+    old = server.queue.maxsize
+    try:
+        server.queue.maxsize = 1
+        server.submit(_prompt(cfg, 4, 1), max_new=1)
+        with pytest.raises(BackpressureError):
+            server.submit(_prompt(cfg, 4, 2), max_new=1)
+    finally:
+        server.queue.maxsize = old
+        server.run()
+
+
+def test_page_exhaustion_blocks_admission(cfg, params_v1):
+    """Paging is real admission currency: with 2 free slots but only
+    enough pages for one request, the second waits for retirement."""
+    srv = WorldModelServer(cfg, params=params_v1, n_slots=2, max_seq=32,
+                           page_len=16, n_pages=2, prompt_buckets=(16,))
+    r1 = srv.submit(_prompt(cfg, 14, 30), max_new=6)   # 20 tokens: 2 pages
+    r2 = srv.submit(_prompt(cfg, 12, 31), max_new=6)   # 18 tokens: 2 pages
+    srv.step()
+    assert srv.sched.slot_req[0] is not None           # r1 decoding
+    assert len(srv.queue) == 1                         # r2 page-starved
+    assert srv.sched.pool.accounting() == (0, 2)
+    srv.run()
+    assert srv.result(r1).shape == (6,)
+    assert srv.result(r2).shape == (6,)
+    assert srv.sched.pool.accounting() == (2, 0)
+    assert srv.sched.admit_order == [r1, r2]
+
+
+# -- hot-swap ---------------------------------------------------------------
+
+
+def test_hotswap_mid_decode_and_zero_transfer_pulls(cfg, params_v1,
+                                                    params_v2):
+    ps = ParameterServer()
+    ps.push(params_v1)
+    srv = WorldModelServer(cfg, param_server=ps, n_slots=1, max_seq=32,
+                           prompt_buckets=(8,))
+    prompt = _prompt(cfg, 5, 40)
+    rid = srv.submit(prompt, max_new=6)
+    srv.step()   # admit (prefill token) + decode tick 1     -> v1
+    srv.step()   # decode tick 2                             -> v1
+    with jax.transfer_guard("disallow"):
+        assert srv.maybe_swap() is False  # unchanged: zero transfers
+    ps.push(params_v2)
+    srv.run()    # decode ticks 3..5 pick up v2 on the next step
+    got = srv.result(rid)
+    assert srv.swaps == 1
+
+    # manual mixed-version replay through the SAME compiled functions
+    sched = srv.sched
+    batch = np.zeros((1, 8), np.int32)
+    batch[0, :5] = prompt
+    lg, pre_cache = sched.pre[8].fn(params_v1, {"tokens": jnp.asarray(batch)},
+                                    jnp.asarray([5], jnp.int32))
+    cache = _admit_update(  # eager call of the admission scatter
+        LM.init_cache_slots(cfg, sched.dec.ctx, 1, 32), pre_cache,
+        jnp.asarray(0, jnp.int32))
+    toks = [int(np.asarray(jnp.argmax(lg[0, :cfg.vocab_size])))]
+    active = jnp.ones((1,), jnp.bool_)
+    for step in range(5):
+        params = params_v1 if step < 2 else params_v2
+        lg, cache = sched.dec.fn(params, cache,
+                                 jnp.asarray([[toks[-1]]], jnp.int32),
+                                 active)
+        toks.append(int(np.asarray(jnp.argmax(lg[0, :cfg.vocab_size]))))
+    np.testing.assert_array_equal(got, np.asarray(toks, np.int32))
+
+    # post-swap requests are bit-identical to a fresh server at v2
+    prompt_b = _prompt(cfg, 7, 41)
+    rid_b = srv.submit(prompt_b, max_new=5)
+    srv.run()
+    fresh = WorldModelServer(cfg, params=params_v2, n_slots=1, max_seq=32,
+                             prompt_buckets=(8,))
+    rid_f = fresh.submit(prompt_b, max_new=5)
+    fresh.run()
+    np.testing.assert_array_equal(srv.result(rid_b), fresh.result(rid_f))
+
+
+# -- the example path -------------------------------------------------------
+
+
+def test_example_serve_smoke():
+    path = (pathlib.Path(__file__).resolve().parent.parent / "examples"
+            / "serve_world_model.py")
+    spec = importlib.util.spec_from_file_location("serve_example", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.PROMPT, mod.GEN, mod.BATCH = 8, 3, 2  # shrink for CI
+    mod.main()
