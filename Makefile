@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-mesh test-procs lint bench bench-hotpath bench-hotpath-sharded soak soak-long
+.PHONY: test test-mesh test-procs lint docs-check bench bench-hotpath bench-hotpath-sharded soak soak-long
 
 # Default aggregate = the multi-device mesh suite FIRST, then the tier-1
 # verify verbatim from ROADMAP.md. The mesh suite must run as its own
@@ -34,6 +34,11 @@ lint:
 		     "running stdlib fallback linter"; \
 		python tools/lint_fallback.py src tests benchmarks examples; \
 	fi
+
+# Docs tier gate (PR 9): every relative link and #anchor in README.md +
+# docs/*.md must resolve (stdlib only, never fetches the network).
+docs-check:
+	python tools/docs_check.py
 
 bench:
 	python -m benchmarks.run

@@ -25,6 +25,10 @@ supposed to guarantee (and what the seed code violated):
   continuous-batching tokens/s, p50/p95 per-token latency, hot-swap
   stall and the compile-count invariants (serve_* metrics, never
   gated; the compile counts are exact-banded by tools/bench_drift.py).
+* with ``--transport``: the PR 9 transport seam — shm vs tcp parameter
+  push / changed pull / unchanged-pull-x100 latencies and a tcp data
+  round-trip (transport_*_usec metrics, never gated), plus the hard
+  zero-array-bytes-on-unchanged-tcp-pull invariant.
 
 Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
 the repo root. With ``--check``, compares fresh numbers against the
@@ -505,6 +509,90 @@ def bench_env_farm(metrics, *, batch_sizes=(1, 64, 256),
     return metrics
 
 
+def bench_transport(metrics):
+    """Transport comparison (PR 9) — measure-only.
+
+    The same parameter pytree pushed and pulled through each transport
+    family: in-process is already covered by ``bench_parameter_server``;
+    this section adds the posix-shm seqlock and the tcp control plane
+    side by side, plus one trajectory claim->push->drain round-trip over
+    tcp. Metric names end in ``_usec`` (not ``_us``) deliberately:
+    absolute socket latencies swing with the host's network stack, so
+    they ride the baseline as tracked numbers and never trip the 20%
+    latency gate. The one HARD invariant — an unchanged tcp
+    ``pull_if_newer`` moves ZERO array payload bytes (the version word
+    rides the frame header) — is ``_require``d here and asserted again
+    by tests/test_net.py."""
+    import numpy as np
+
+    from repro.core.servers import ShmParameterServer
+    from repro.net import ControlPlane
+
+    params = {"w": [np.ones((256, 256), np.float32) for _ in range(4)],
+              "b": [np.ones((256,), np.float32) for _ in range(4)]}
+    metrics["transport_param_payload_bytes"] = \
+        sum(a.nbytes for a in jax.tree.leaves(params))
+
+    # -- posix-shm seqlock (the procs-mode default)
+    with ShmParameterServer(params) as shm:
+        metrics["transport_shm_push_usec"] = \
+            _timeit(lambda: shm.push(params), reps=MICRO_REPS)
+        ver = shm.version
+
+        def shm_gated():
+            for _ in range(100):
+                v, _ = shm.pull_if_newer(ver)
+                _require(v is None, "gated shm pull returned a value")
+        metrics["transport_shm_pull_unchanged_x100_usec"] = \
+            _timeit(shm_gated, reps=MICRO_REPS)
+
+        def shm_changed():
+            v, _ = shm.pull_if_newer(ver - 1)   # stale: full copy-out
+            _require(v is not None, "stale shm pull returned nothing")
+        metrics["transport_shm_pull_changed_usec"] = \
+            _timeit(shm_changed, reps=MICRO_REPS)
+
+    # -- tcp control plane (loopback; remote adds wire RTT on top)
+    with ControlPlane() as plane:
+        ps = plane.parameter_server("bench", template=params)
+        metrics["transport_tcp_push_usec"] = \
+            _timeit(lambda: ps.push(params), reps=MICRO_REPS)
+        ver = ps.version
+        before = ps.array_bytes_received
+
+        def tcp_gated():
+            for _ in range(100):
+                v, _ = ps.pull_if_newer(ver)
+                _require(v is None, "gated tcp pull returned a value")
+        metrics["transport_tcp_pull_unchanged_x100_usec"] = \
+            _timeit(tcp_gated, reps=MICRO_REPS)
+        metrics["transport_tcp_unchanged_payload_bytes"] = \
+            ps.array_bytes_received - before
+        _require(metrics["transport_tcp_unchanged_payload_bytes"] == 0,
+                 "unchanged tcp pull moved array bytes over the wire")
+
+        def tcp_changed():
+            v, _ = ps.pull_if_newer(ver - 1)    # stale: full wire copy
+            _require(v is not None, "stale tcp pull returned nothing")
+        metrics["transport_tcp_pull_changed_usec"] = \
+            _timeit(tcp_changed, reps=MICRO_REPS)
+
+        ds = plane.data_server(n_collectors=1)
+        traj = {"obs": np.ones((15, 3), np.float32),
+                "act": np.ones((15, 1), np.float32),
+                "rew": np.ones((15,), np.float32)}
+
+        def data_roundtrip():
+            _require(ds.try_claim(0, 1) == 1, "tcp claim denied")
+            ds.push(traj, collector_id=0)
+            _require(len(ds.drain()) == 1, "tcp drain lost the push")
+        metrics["transport_tcp_data_roundtrip_usec"] = \
+            _timeit(data_roundtrip, reps=MICRO_REPS)
+        ps.close()
+        ds.close()
+    return metrics
+
+
 def bench_serve(metrics, *, n_requests=12, max_new=16):
     """Serving-tier throughput/latency (ISSUE 8) — measure-only.
 
@@ -656,7 +744,8 @@ def _sharded_child() -> dict:
 def run_bench(*, sharded: bool = False,
               collect_scaling: bool = False,
               env_farm: bool = False,
-              serve: bool = False) -> dict:
+              serve: bool = False,
+              transport: bool = False) -> dict:
     metrics = {}
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
@@ -668,6 +757,8 @@ def run_bench(*, sharded: bool = False,
         bench_env_farm(metrics)
     if serve:
         bench_serve(metrics)
+    if transport:
+        bench_transport(metrics)
     if sharded:
         bench_sharded(metrics)
     return {
@@ -726,6 +817,12 @@ def main(argv=None) -> int:
                          "batching tokens/s, p50/p95 per-token latency, "
                          "hot-swap stall and compile counts (serve_* "
                          "metrics, never gated)")
+    ap.add_argument("--transport", action="store_true",
+                    help="also measure the transport seam: shm vs tcp "
+                         "push / changed pull / unchanged-pull-x100 and "
+                         "a tcp data round-trip (transport_* metrics, "
+                         "never gated; the zero-bytes-on-unchanged-pull "
+                         "invariant IS hard-required)")
     ap.add_argument("--sharded-child", action="store_true",
                     help=argparse.SUPPRESS)   # internal: see bench_sharded
     ap.add_argument("--out", default=str(BASELINE))
@@ -738,7 +835,8 @@ def main(argv=None) -> int:
     fresh = run_bench(sharded=args.sharded,
                       collect_scaling=args.collect_scaling,
                       env_farm=args.env_farm,
-                      serve=args.serve)
+                      serve=args.serve,
+                      transport=args.transport)
     for k, v in fresh["metrics"].items():
         print(f"hotpath/{k},{v}")
 
@@ -778,7 +876,8 @@ def main(argv=None) -> int:
         skipped = [p for p, ran in (("collect_scaling_",
                                      args.collect_scaling),
                                     ("env_farm_", args.env_farm),
-                                    ("serve_", args.serve))
+                                    ("serve_", args.serve),
+                                    ("transport_", args.transport))
                    if not ran]
         old = json.loads(out.read_text()).get("metrics", {})
         for k, v in old.items():

@@ -83,7 +83,8 @@ def _build(profile: Dict[str, Any], seed: int, total_trajs: int):
                    push_timeout_s=90.0,
                    eval_rollouts=2, eval_every_policy_steps=20,
                    min_final_model_version=1,
-                   min_final_policy_version=1)
+                   min_final_policy_version=1,
+                   transport=str(profile.get("transport", "shm")))
     return env, ens, pol, acfg, rc
 
 
@@ -271,8 +272,13 @@ def main(argv=None) -> int:
                     help="override the profile's total_trajs")
     ap.add_argument("--faults", type=int, default=None,
                     help="override the profile's planned fault count")
+    ap.add_argument("--transport", choices=["shm", "tcp"], default="shm",
+                    help="server transport under chaos: shm (default) "
+                         "or the tcp control plane — SIGKILLed remote "
+                         "collectors must refund exactly and the "
+                         "monitor must see the same invariants")
     args = ap.parse_args(argv)
-    overrides: Dict[str, Any] = {}
+    overrides: Dict[str, Any] = {"transport": args.transport}
     if args.trajs is not None:
         overrides["total_trajs"] = args.trajs
     if args.faults is not None:

@@ -4,11 +4,12 @@ from repro.core.runtime import (AsyncTrainer, PartialAsyncDataPolicy,
                                 PartialAsyncModelPolicy, RunConfig,
                                 SequentialTrainer, Supervisor,
                                 SupervisorChain, clear_eval_cache)
-from repro.core.servers import (BackpressureError, DataServer, LocalBuffer,
-                                ParameterServer, ProcDataServer,
-                                ReplayBuffer, ShmParameterServer,
-                                live_data_servers, live_shm_segments,
-                                reclaim_ipc_resources)
+from repro.core.servers import (BackpressureError, DataServer,
+                                DataTransport, LocalBuffer,
+                                ParameterServer, ParameterTransport,
+                                ProcDataServer, ReplayBuffer,
+                                ShmParameterServer, live_data_servers,
+                                live_shm_segments, reclaim_ipc_resources)
 from repro.core.workers import (DataCollectionWorker, ExplorationSchedule,
                                 ModelLearningWorker,
                                 PolicyImprovementWorker, ProcChannels,

@@ -109,6 +109,18 @@ class RunConfig:
     # min_final_model_version > 0 with total_trajs < min_warmup_trajs.
     min_final_model_version: int = 0
     min_final_policy_version: int = 0
+    # transport behind the servers (PR 9): "shm" keeps the in-process /
+    # posix-shm fast path (zero-copy unchanged pulls, single host);
+    # "tcp" routes every server through the socket control plane
+    # (src/repro/net) — same version-gating and exact-criterion ticket
+    # contracts across a machine boundary, and remote collectors may
+    # join a live run via `--connect`. threads/procs modes only (the
+    # event engine is a single-process simulation).
+    transport: str = "shm"
+    # tcp: "host:port" the control plane listens on. None = loopback
+    # with an ephemeral port (tests, single-host runs); "0.0.0.0:5555"
+    # publishes the plane for remote joiners.
+    bind: Optional[str] = None
 
 
 # One compiled eval program per (env, n_rollouts): every _Recorder used
@@ -358,6 +370,14 @@ class AsyncTrainer:
         if run_cfg.envs_per_collector < 1:
             raise ValueError(f"envs_per_collector must be >= 1, got "
                              f"{run_cfg.envs_per_collector}")
+        if run_cfg.transport not in ("shm", "tcp"):
+            raise ValueError(f"transport must be 'shm' or 'tcp', got "
+                             f"{run_cfg.transport!r}")
+        if run_cfg.transport == "tcp" and mode == "event":
+            raise ValueError(
+                'transport="tcp" needs a real engine (mode="threads" or '
+                '"procs"): the event engine is a single-process virtual-'
+                "clock simulation with nothing to transport")
         self.run_cfg = run_cfg
         self.exploration = exploration if exploration is not None else (
             ExplorationSchedule(tuple(run_cfg.collect_noise))
@@ -369,9 +389,26 @@ class AsyncTrainer:
         self.roles = roles
         key = jax.random.key(run_cfg.seed)
         kc, km, kp, self._keval = jax.random.split(key, 4)
-        self.data_server = DataServer()
-        self.model_server = ParameterServer()
-        self.policy_server = ParameterServer()
+        # transport seam (PR 9): threads + tcp runs every server through
+        # ONE socket control plane — the workers are transport-blind
+        # (identical method surface), only the handles change. Codecs
+        # are fixed lazily from the first push (the workers that own the
+        # templates are constructed just below). procs mode selects its
+        # transport inside _run_procs; shm (default) is this block's
+        # else-branch, bit for bit the previous engine.
+        self._plane = None
+        if run_cfg.transport == "tcp" and mode == "threads":
+            from repro.net import ControlPlane
+            self._plane = ControlPlane(run_cfg.bind or "127.0.0.1:0")
+            self.model_server = self._plane.parameter_server("model")
+            self.policy_server = self._plane.parameter_server("policy")
+            self.data_server = self._plane.data_server(
+                n_collectors=run_cfg.n_collectors,
+                push_timeout=run_cfg.push_timeout_s)
+        else:
+            self.data_server = DataServer()
+            self.model_server = ParameterServer()
+            self.policy_server = ParameterServer()
         # workers shard batches along the axis the split was carved on
         # (NOT axis_names[0]: on a 2-pod mesh the split skips the 2-wide
         # 'pod' axis and carves 'data')
@@ -410,11 +447,30 @@ class AsyncTrainer:
 
     # ------------------------------------------------------------- event
     def run(self) -> List[Dict[str, float]]:
-        if self.mode == "threads":
-            return self._run_threads()
-        if self.mode == "procs":
-            return self._run_procs()
-        return self._run_event()
+        try:
+            if self.mode == "threads":
+                return self._run_threads()
+            if self.mode == "procs":
+                return self._run_procs()
+            return self._run_event()
+        finally:
+            # threads + tcp: the trainer owns the control plane for ONE
+            # run. Snapshot the final versions/count (post-run asserts
+            # read them), then shut the plane and its client handles —
+            # this trainer is single-run, like every engine here.
+            if self._plane is not None:
+                try:
+                    self.net_info = {
+                        "model_version": int(self.model_server.version),
+                        "policy_version": int(self.policy_server.version),
+                        "trajs": int(self.data_server.total_pushed)}
+                except Exception:
+                    pass
+                for srv in (self.model_server, self.policy_server,
+                            self.data_server):
+                    srv.close()
+                self._plane.close()
+                self._plane = None
 
     def _run_event(self):
         rc = self.run_cfg
@@ -599,18 +655,41 @@ class AsyncTrainer:
         # ResourceAuditor sweeps /dev/shm + fds afterwards and must find
         # zero leaks even after a chaotic run)
         with ExitStack() as stack:
-            model_srv = stack.enter_context(
-                ShmParameterServer(self.model_worker.params))
-            policy_srv = stack.enter_context(
-                ShmParameterServer(self.policy_worker.state["policy"]))
-            # ticket-armed: N collector processes claim collection slots
-            # from the shared server, so the global criterion lands
-            # exactly even across collector crashes (the parent refunds
-            # in-flight tickets)
-            data_srv = stack.enter_context(
-                ProcDataServer(ctx, n_collectors=rc.n_collectors,
-                               target=rc.total_trajs,
-                               push_timeout=rc.push_timeout_s))
+            # transport seam (PR 9): the supervision loop below is
+            # TRANSPORT-BLIND — both families expose the same methods
+            # (pull_host/version for snapshots and completion,
+            # refund_inflight for crash refunds), so everything after
+            # this block is identical for shm and tcp.
+            plane = None
+            if rc.transport == "tcp":
+                from repro.net import ControlPlane
+                plane = stack.enter_context(
+                    ControlPlane(rc.bind or "127.0.0.1:0"))
+                model_srv = stack.enter_context(
+                    plane.parameter_server("model",
+                                           self.model_worker.params))
+                policy_srv = stack.enter_context(
+                    plane.parameter_server(
+                        "policy", self.policy_worker.state["policy"]))
+                # same ticket arming as the mp queue below; counters
+                # live on the plane, so remote joiners (--connect)
+                # share the one exact criterion
+                data_srv = stack.enter_context(plane.data_server(
+                    n_collectors=rc.n_collectors, target=rc.total_trajs,
+                    push_timeout=rc.push_timeout_s))
+            else:
+                model_srv = stack.enter_context(
+                    ShmParameterServer(self.model_worker.params))
+                policy_srv = stack.enter_context(
+                    ShmParameterServer(self.policy_worker.state["policy"]))
+                # ticket-armed: N collector processes claim collection
+                # slots from the shared server, so the global criterion
+                # lands exactly even across collector crashes (the
+                # parent refunds in-flight tickets)
+                data_srv = stack.enter_context(
+                    ProcDataServer(ctx, n_collectors=rc.n_collectors,
+                                   target=rc.total_trajs,
+                                   push_timeout=rc.push_timeout_s))
             trace_q = ctx.Queue()
             # the trace queue's pipe fds are parent-held IPC too: close
             # them with the servers, not at GC time
@@ -626,6 +705,12 @@ class AsyncTrainer:
             spec = ProcSpec(self.env, self.ens_cfg, self.algo_cfg,
                             self.pol_cfg, rc, rc.seed,
                             exploration=self.exploration)
+            if plane is not None:
+                # publish the spec for remote joiners (--connect): a
+                # joining host rebuilds a collector from it and claims
+                # from the same ticket counters as the local fleet
+                import pickle as _pickle
+                plane.set_join_spec(_pickle.dumps(spec))
             # exposed for tests/benchmarks/chaos: kill-and-restart pokes
             # _procs, the hotpath bench reads server versions while the
             # run is live, supervisors read channels + restart counters

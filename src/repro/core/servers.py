@@ -5,7 +5,9 @@ two parameter servers (model, policy). Thread-safe, versioned; ``pull``
 never blocks on a writer (the paper's lock-free spirit at phase
 granularity — see DESIGN.md §2 for the TPU adaptation).
 
-Two transport families share one interface:
+Three transport families share one interface — the :class:`ParameterTransport`
+/ :class:`DataTransport` protocols below (PR 9), so workers, engines, and
+supervisors are transport-blind:
 
 * in-process (``ParameterServer`` / ``DataServer``): device-resident,
   zero-copy — the event and threads engines;
@@ -16,7 +18,13 @@ Two transport families share one interface:
   queue into the model worker's ring buffer. The PR 1 version contract
   is preserved: ``push`` bumps an atomic version, ``pull_if_newer`` on
   an unchanged version is ONE 8-byte read — zero array copies
-  (counter-instrumented; asserted by tests/test_procs.py).
+  (counter-instrumented; asserted by tests/test_procs.py);
+* cross-host (``repro.net``: ``TcpParameterServer`` / ``TcpDataServer``
+  against a ``ControlPlane``): ``RunConfig.transport="tcp"``. The
+  version word rides the 32-byte frame header, so an unchanged
+  ``pull_if_newer`` moves ZERO array bytes over the wire; the ticket
+  counters live on the plane, so the exact criterion and crash-refund
+  semantics hold verbatim across hosts. See docs/WIRE_PROTOCOL.md.
 
 Both data servers are MULTI-PRODUCER (collector fleets, ISSUE 5): N
 collectors push concurrently, the global trajectory counter stays exact
@@ -43,7 +51,8 @@ import queue as _queue
 import struct
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import (Any, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +61,74 @@ import numpy as np
 # NOTE: on backends without buffer aliasing (CPU) the donated jits below
 # warn once at compile that donation fell back to a copy — that is
 # expected there and left visible on purpose (no global warning filter).
+
+
+# ------------------------------------------------------------ transport seam
+#
+# The PR 9 pluggable-transport contract. These protocols are DOCUMENTED
+# interfaces, not base classes: the three implementations (in-process,
+# shm/mp, tcp) share no code — each earns the guarantees its own way —
+# and `isinstance(x, ParameterTransport)` checks the seam structurally.
+
+@runtime_checkable
+class ParameterTransport(Protocol):
+    """What every parameter store guarantees, whatever the wire.
+
+    * ``push(value) -> version``: publish atomically; a reader can never
+      observe a torn value (device snapshot / seqlock / server-side swap
+      under one lock). Monotone: each push bumps the version by 1.
+    * ``pull_if_newer(version, *, sharding=None) -> (value|None, ver)``:
+      the UNCHANGED path transfers no array data — one int compare
+      (in-process), one 8-byte shm read, or one header-only TCP
+      round-trip — and is counter-asserted by tests and benchmarks.
+    * ``pull() -> (value|None, version)``: unconditional latest.
+    * ``pull_host() -> (host value|None, version)``: the only sanctioned
+      device->host boundary (checkpoint / serving / supervisor).
+    * ``version -> int``: current version; 0 means nothing pushed yet.
+    * crash safety: a writer dying mid-push never corrupts what readers
+      see — they keep their cached value (degrade, never hang or tear).
+    """
+
+    def push(self, value) -> int: ...
+    def pull(self): ...
+    def pull_if_newer(self, version: int, *, sharding=None): ...
+    def pull_host(self): ...
+    @property
+    def version(self) -> int: ...
+
+
+@runtime_checkable
+class DataTransport(Protocol):
+    """What every trajectory data server guarantees, whatever the wire.
+
+    * ``push(traj, *, collector_id)`` / ``push_batch(batch, n, *,
+      collector_id)``: multi-producer safe; ``total_pushed`` moves
+      atomically with the pusher's in-flight settlement (one lock), so
+      the global count is exact under interleaving and restarts.
+    * ``try_claim(collector_id, k) -> granted``: reserves
+      ``min(k, remaining)`` toward the armed target under that same
+      lock — a fleet can never overshoot; denied claims back off
+      ``claim_backoff`` seconds instead of spinning.
+    * ``refund_inflight(collector_id) -> n``: returns EXACTLY the
+      tickets claimed-but-never-pushed by a dead collector; idempotent.
+    * ``drain() -> [traj dict, ...]``: moves everything queued to the
+      caller; batch items are unstacked into per-lane dicts.
+    * ``set_target(total)`` arms the criterion; ``total_pushed`` /
+      ``__len__`` report exact global progress.
+    * backpressure: a push against a full bounded queue raises
+      :class:`BackpressureError` after ``push_timeout`` — loud, never a
+      silent drop (the unbounded in-process server never blocks).
+    """
+
+    def push(self, traj, *, collector_id: int = 0) -> int: ...
+    def push_batch(self, batch, n: int, *, collector_id: int = 0) -> int: ...
+    def set_target(self, total: int) -> None: ...
+    def try_claim(self, collector_id: int = 0, k: int = 1) -> int: ...
+    def refund_inflight(self, collector_id: int) -> int: ...
+    def drain(self) -> List[Any]: ...
+    @property
+    def total_pushed(self) -> int: ...
+    def __len__(self) -> int: ...
 
 
 class ParameterServer:

@@ -487,7 +487,9 @@ class ProcSpec:
     plain-dataclass configs + the shared seed. The child derives the
     same per-role keys as the in-process engines (split(key(seed), 4);
     fleet collectors additionally fold their id in — see
-    ``collector_key``)."""
+    ``collector_key``). Also the JOIN payload of the tcp transport:
+    the parent publishes a pickled ProcSpec on its ControlPlane and a
+    ``--connect`` joiner rebuilds a collector from it (net/join.py)."""
     env: Any                    # frozen env dataclass (picklable)
     ens_cfg: DYN.EnsembleConfig
     algo_cfg: Any               # mbrl.AlgoConfig
@@ -499,10 +501,13 @@ class ProcSpec:
 
 @dataclasses.dataclass
 class ProcChannels:
-    """IPC endpoints shared by all three worker processes."""
-    model_server: Any           # ShmParameterServer (written by model)
-    policy_server: Any          # ShmParameterServer (written by policy)
-    data: Any                   # ProcDataServer (collector -> model)
+    """IPC endpoints shared by all three worker processes. The server
+    handles are transport-blind (servers.ParameterTransport /
+    DataTransport): shm/mp servers or tcp clients pickle through spawn
+    identically, and the worker loops never know which they hold."""
+    model_server: Any           # ParameterTransport (written by model)
+    policy_server: Any          # ParameterTransport (written by policy)
+    data: Any                   # DataTransport (collector -> model)
     trace_q: Any                # mp.Queue: eval-trace rows -> parent
     stop: Any                   # mp.Event: parent-ordered shutdown
     t0: float                   # parent's monotonic run start (shared

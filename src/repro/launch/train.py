@@ -65,7 +65,11 @@ def run_mbrl(args):
                    ckpt_dir=args.ckpt_dir,
                    n_collectors=args.n_collectors,
                    collect_noise=collect_noise,
-                   envs_per_collector=args.envs_per_collector)
+                   envs_per_collector=args.envs_per_collector,
+                   transport=args.transport, bind=args.bind)
+    if args.transport == "tcp" and args.engine != "async":
+        raise SystemExit("--transport tcp needs --engine async "
+                         "(the control plane serves the async servers)")
     if args.n_collectors > 1 and args.engine != "async":
         raise SystemExit("--n-collectors > 1 needs --engine async "
                          "(collector fleets belong to the async engine)")
@@ -117,6 +121,21 @@ def run_mbrl(args):
             json.dump(out, f, indent=1)
         print("wrote", args.out)
     return trace
+
+
+def run_join(args):
+    """``--connect host:port``: no training here — this process donates
+    ``--n-collectors`` remote collectors to a live run's control plane
+    and exits when the run's global criterion is fully claimed."""
+    from repro.net import join_as_collectors
+    t0 = time.perf_counter()
+    n = join_as_collectors(args.connect, n_collectors=args.n_collectors)
+    print(json.dumps({"connect": args.connect,
+                      "n_collectors": args.n_collectors,
+                      "trajs_contributed": n,
+                      "real_seconds": round(time.perf_counter() - t0, 1)},
+                     indent=1))
+    return n
 
 
 def run_lm(args):
@@ -199,6 +218,22 @@ def main():
                          "async engine over a device mesh (core/roles.py)")
     ap.add_argument("--role-ratios", default="1,2,1",
                     help="collector,model,policy share of the mesh axis")
+    ap.add_argument("--transport", default="shm", choices=["shm", "tcp"],
+                    help="how workers reach the servers: shm = in-process"
+                         " / shared-memory fast path (default); tcp = "
+                         "socket control plane (net/), reachable from "
+                         "other hosts via --bind")
+    ap.add_argument("--bind", default=None,
+                    help="tcp transport: HOST:PORT the control plane "
+                         "listens on (default 127.0.0.1:<ephemeral>); "
+                         "bind :PORT or 0.0.0.0:PORT to let remote "
+                         "collectors --connect")
+    ap.add_argument("--connect", default=None,
+                    help="join a LIVE run as extra remote collectors "
+                         "instead of training: HOST:PORT of its control "
+                         "plane (pair with --n-collectors for fan-out). "
+                         "Connect only to planes you trust — the join "
+                         "ticket is a pickle (docs/WIRE_PROTOCOL.md)")
     ap.add_argument("--ckpt-dir", default=None,
                     help="procs mode: where the supervisor snapshots "
                          "params+versions (default: fresh temp dir)")
@@ -212,6 +247,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.task == "mbrl":
+        if args.connect:
+            run_join(args)
+            return
         run_mbrl(args)
     else:
         run_lm(args)

@@ -1,0 +1,24 @@
+"""Socket transport for the control plane (PR 9).
+
+The multi-host seam behind ``core/servers.py``: the same versioned
+parameter stores and exact-criterion data server, reachable over TCP.
+See docs/WIRE_PROTOCOL.md for the frame format and
+docs/ARCHITECTURE.md for where this sits in the system.
+
+* :mod:`repro.net.frame` — the 32-byte frame header (version word
+  rides the header, so unchanged pulls move zero array bytes) and the
+  LeafCodec / tree-frame payload encodings;
+* :mod:`repro.net.control` — :class:`ControlPlane`, the threaded
+  server hosting every store of a run behind one ``--bind`` address;
+* :mod:`repro.net.client` — :class:`TcpParameterServer` /
+  :class:`TcpDataServer`, drop-in peers of the shm/mp servers;
+* :mod:`repro.net.join` — ``--connect``: join a live run as extra
+  remote collectors.
+"""
+from repro.net.client import TcpDataServer, TcpParameterServer
+from repro.net.control import ControlPlane, parse_addr
+from repro.net.frame import ProtocolError
+from repro.net.join import join_as_collectors
+
+__all__ = ["ControlPlane", "TcpParameterServer", "TcpDataServer",
+           "ProtocolError", "parse_addr", "join_as_collectors"]

@@ -1,0 +1,290 @@
+"""Socket-transport clients: drop-in peers of the shm/mp servers.
+
+``TcpParameterServer`` and ``TcpDataServer`` expose the exact method
+surface of ``ShmParameterServer`` / ``ProcDataServer`` (pull_if_newer,
+try_claim/refund_inflight, push/push_batch/drain, the counters the
+benchmarks and the InvariantMonitor read), so ``ProcChannels``, the
+worker loops, and the supervision code are transport-blind.
+
+Each handle owns ONE lazily-dialled TCP connection guarded by a thread
+lock; handles pickle across spawn (socket and lock are dropped and
+re-created), so they ride ``ProcSpec``/``ProcChannels`` into children
+exactly like the shm handles do. A connection error closes the socket
+and the next call redials — a reconnecting collector resumes the
+GLOBAL counters because all state lives on the plane.
+"""
+from __future__ import annotations
+
+import pickle
+import socket
+import threading
+import time
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.net import frame as F
+
+
+class _TcpHandle:
+    """One RPC connection: lazy dial, serialised request/reply, redial
+    after any failure. Picklable (socket/lock dropped)."""
+
+    def __init__(self, addr: Tuple[str, int], *, timeout: float = 60.0):
+        self._addr = tuple(addr)
+        self._timeout = float(timeout)
+        self._sock = None
+        self._lock = threading.Lock()
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_sock"] = None
+        state["_lock"] = None
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
+
+    def _conn(self):
+        if self._sock is None:
+            s = socket.create_connection(self._addr, timeout=self._timeout)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._sock = s
+        return self._sock
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def _rpc(self, op: int, *, word: int = 0, aux: int = 0, flags: int = 0,
+             payload: bytes = b"") -> Tuple[int, int, int, int, bytes]:
+        """Send one frame, read one reply. On ANY transport failure the
+        socket is dropped (next call redials) and the error propagates —
+        callers choose whether to degrade (gated pulls) or stay loud
+        (pushes, claims)."""
+        with self._lock:
+            try:
+                sock = self._conn()
+                F.send_frame(sock, op, word=word, aux=aux, flags=flags,
+                             payload=payload)
+                rop, rword, raux, rflags, rpayload = F.recv_frame(sock)
+            except (F.ProtocolError, OSError):
+                self._drop()
+                raise
+        if rop == F.OP_ERR:
+            raise RuntimeError("control plane error: "
+                               + rpayload.decode(errors="replace"))
+        return rop, rword, raux, rflags, rpayload
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class TcpParameterServer(_TcpHandle):
+    """Versioned parameter store over the socket transport.
+
+    The version word rides the FRAME HEADER: an unchanged
+    ``pull_if_newer`` is one 32-byte request + one 32-byte reply with
+    zero payload bytes — ``array_bytes_received`` (every parameter
+    payload byte this handle ever read) stays untouched, the
+    counter-asserted mirror of the shm path's zero-copy contract. A
+    transport failure during a gated pull DEGRADES to the cached value
+    ((None, version), socket redialled next call) exactly like a seqlock
+    reader seeing a crashed writer; pushes stay loud.
+    """
+
+    def __init__(self, addr, store_id: int, name: str = "",
+                 template=None, *, timeout: float = 60.0):
+        super().__init__(addr, timeout=timeout)
+        self.store_id = int(store_id)
+        self.name = name
+        self._codec = None
+        if template is not None:
+            from repro.checkpoint.io import LeafCodec
+            self._codec = LeafCodec(template)
+        self.copies = 0                 # leaves copied out (parity w/ shm)
+        self.pushes = 0
+        self.array_bytes_received = 0   # parameter payload bytes pulled
+
+    def _ensure_codec(self, value=None):
+        if self._codec is None:
+            if value is not None:
+                from repro.checkpoint.io import LeafCodec
+                self._codec = LeafCodec(value)
+                # publish for template-less peers (remote joiners)
+                self._rpc(F.OP_PINIT, aux=self.store_id,
+                          payload=pickle.dumps(self._codec))
+            else:
+                _, _, _, _, blob = self._rpc(F.OP_PMETA, aux=self.store_id)
+                self._codec = pickle.loads(blob)
+        return self._codec
+
+    def push(self, value) -> int:
+        """Encode leaves with the shared LeafCodec, swap the server blob,
+        bump the version word. Loud on failure (a lost push must never
+        pass silently). Returns the new version."""
+        codec = self._ensure_codec(value)
+        _, ver, _, _, _ = self._rpc(F.OP_PPUSH, aux=self.store_id,
+                                    payload=F.encode_leaves(codec, value))
+        self.pushes += 1
+        return ver
+
+    def pull_if_newer(self, version: int, *, sharding=None):
+        """(value, current_version) when newer than ``version``, else
+        (None, version-as-seen). Unchanged cost: one header-only
+        round-trip, zero array bytes. Transport failure: degrade to
+        (None, version) — the caller keeps its cache. ``sharding`` is
+        accepted for interface parity and ignored (pulled leaves are
+        host arrays; each process re-homes them onto its own backend)."""
+        try:
+            _, ver, _, _, payload = self._rpc(F.OP_PPULL, word=version,
+                                              aux=self.store_id)
+            if not payload:
+                return None, ver
+            value = F.decode_leaves(self._ensure_codec(), payload)
+        except (F.ProtocolError, OSError):
+            return None, version
+        self.array_bytes_received += len(payload)
+        self.copies += self._codec.n_leaves
+        return value, ver
+
+    def pull(self):
+        """Unconditional pull -> (value-or-None, version)."""
+        value, ver = self.pull_if_newer(-1)
+        return value, (ver if value is not None else self.version)
+
+    def pull_host(self):
+        """Interface parity with ParameterServer: pulls are already
+        host-materialised."""
+        return self.pull()
+
+    @property
+    def version(self) -> int:
+        """Current server version: one header-only RPC (loud on
+        failure — monitors poll this only while the plane is up)."""
+        _, ver, _, _, _ = self._rpc(F.OP_PVER, aux=self.store_id)
+        return ver
+
+
+class TcpDataServer(_TcpHandle):
+    """The trajectory data server over the socket transport.
+
+    Exact-criterion ticket protocol as explicit RPCs with the shm/mp
+    semantics verbatim: ``try_claim(collector_id, k)`` grants
+    ``min(k, remaining)`` under the plane's one lock (denied claims
+    back off ``claim_backoff`` client-side), ``refund_inflight``
+    returns EXACTLY the stranded count of a collector that died between
+    claim and push, a push that times out on a full queue raises
+    :class:`repro.core.servers.BackpressureError` with the same
+    diagnosis. All counters live on the plane, so a SIGKILLed-and-
+    replaced collector resumes the GLOBAL count.
+    """
+
+    def __init__(self, addr, *, n_collectors: int = 1,
+                 push_timeout: float = 30.0, claim_backoff: float = 0.002,
+                 timeout: float = 60.0):
+        # rpc timeout must exceed the server-side full-queue wait
+        super().__init__(addr, timeout=max(timeout, push_timeout + 30.0))
+        self.n_collectors = max(int(n_collectors), 1)
+        self.push_timeout = float(push_timeout)
+        self.claim_backoff = float(claim_backoff)
+
+    def _raise_backpressure(self, collector_id, timeout, maxsize):
+        from repro.core.servers import BackpressureError
+        raise BackpressureError(
+            f"trajectory queue full: collector {collector_id} waited "
+            f"{timeout:.1f}s to push and the queue still holds "
+            f"{maxsize} (maxsize) undrained items. The slowest "
+            "consumer is the model worker's drain->ring-write path "
+            "(ModelLearningWorker._refresh_data); raise "
+            "RunConfig.push_timeout_s, enlarge the queue, or check "
+            "whether the model process is wedged/compiling."
+        ) from None
+
+    def _push_blob(self, blob: bytes, n: int, collector_id: int,
+                   timeout: Optional[float]) -> int:
+        timeout = self.push_timeout if timeout is None else timeout
+        op, total, _, _, _ = self._rpc(
+            F.OP_DPUSH, word=int(timeout * 1000), aux=int(collector_id),
+            flags=int(n), payload=blob)
+        if op == F.OP_FULL:
+            self._raise_backpressure(collector_id, timeout, total or 512)
+        return total
+
+    def push(self, traj, *, collector_id: int = 0,
+             timeout: Optional[float] = None) -> int:
+        """Host-materialise one trajectory, ship it as a self-describing
+        tree frame, settle one in-flight ticket atomically server-side.
+        Full queue after ``timeout``: BackpressureError (loud)."""
+        host = jax.tree.map(np.asarray, traj)
+        return self._push_blob(F.encode_tree(host), 1, collector_id,
+                               timeout)
+
+    def push_batch(self, batch, n: int, *, collector_id: int = 0,
+                   timeout: Optional[float] = None) -> int:
+        """Ship ``n`` stacked trajectories as ONE queue item (one frame,
+        one ticket settlement of n) — drain unstacks lanes consumer-side
+        exactly like ``ProcDataServer``."""
+        host = jax.tree.map(np.asarray, batch)
+        return self._push_blob(F.encode_tree(host), int(n), collector_id,
+                               timeout)
+
+    def try_claim(self, collector_id: int = 0, k: int = 1) -> int:
+        """Reserve up to ``k`` slots toward the global target (one RPC,
+        granted = min(k, remaining) under the plane lock); 0 once the
+        target is fully claimed. Denied claims sleep ``claim_backoff``
+        client-side so remote losers of the final-claim race back off
+        without holding a connection thread."""
+        _, g, _, _, _ = self._rpc(F.OP_DCLAIM, word=int(k),
+                                  aux=int(collector_id))
+        if g == 0:
+            time.sleep(self.claim_backoff)
+        return g
+
+    def refund_inflight(self, collector_id: int) -> int:
+        """Return EXACTLY the tickets ``collector_id`` claimed but never
+        pushed (it died mid-batch); idempotent — a second refund is 0."""
+        _, g, _, _, _ = self._rpc(F.OP_DREFUND, aux=int(collector_id))
+        return g
+
+    def drain(self) -> List[Any]:
+        """Move everything queued to the caller as per-trajectory dicts;
+        batch items are unstacked into np views along the lane axis."""
+        _, count, _, _, payload = self._rpc(F.OP_DDRAIN)
+        out: List[Any] = []
+        for n, blob in F.unpack_drain_items(payload, count):
+            tree = F.decode_tree(blob)
+            if n > 1:
+                out.extend({k: v[i] for k, v in tree.items()}
+                           for i in range(n))
+            else:
+                out.append(tree)
+        return out
+
+    def set_target(self, total: int) -> None:
+        """Arm the stopping criterion: from now on claims grant exactly
+        ``total - total_pushed`` more slots."""
+        self._rpc(F.OP_DTARGET, word=int(total))
+
+    @property
+    def total_pushed(self) -> int:
+        """Exact global trajectory count (one RPC; plane-side lock)."""
+        _, total, _, _, _ = self._rpc(F.OP_DTOTAL)
+        return total
+
+    def __len__(self) -> int:
+        _, n, _, _, _ = self._rpc(F.OP_DLEN)
+        return n

@@ -1,0 +1,111 @@
+"""Remote collector entry (`--connect host:port`).
+
+A joining process asks the run's ControlPlane for a JOIN ticket — the
+pickled :class:`~repro.core.workers.ProcSpec` the trainer published, a
+fresh collector id (allocated past the trainer's own fleet), and the
+store-name -> id map — rebuilds a :class:`DataCollectionWorker` locally
+exactly like a spawned procs-mode child, and runs the standard
+claim -> collect -> push loop against the plane until the global
+criterion is fully claimed.
+
+Exactness across the boundary: joiners claim from the SAME ticket
+counters as the local fleet, so they can never overshoot the criterion;
+a joiner that dies between claim and push leaves its tickets in flight
+on the plane, refundable exactly once via ``refund_inflight(id)`` (the
+joiner refunds its own on any clean or error exit; a SIGKILLed joiner's
+tickets must be refunded by an operator or the trainer on timeout —
+the plane never auto-refunds a disconnect, see net/control.py).
+
+Trust: the JOIN ticket is a pickle — connect only to planes you run
+(docs/WIRE_PROTOCOL.md 'Security model').
+"""
+from __future__ import annotations
+
+import pickle
+import threading
+import time
+from typing import List
+
+from repro.net import frame as F
+from repro.net.client import TcpDataServer, TcpParameterServer, _TcpHandle
+from repro.net.control import parse_addr
+
+
+def request_join_ticket(addr) -> dict:
+    """One JOIN RPC -> {spec, collector_id, stores, n_collectors,
+    push_timeout, claim_backoff}. Each call allocates a fresh id."""
+    with _TcpHandle(tuple(addr)) as h:
+        _, cid, _, _, payload = h._rpc(F.OP_JOIN)
+    ticket = pickle.loads(payload)
+    ticket["collector_id"] = int(cid)
+    return ticket
+
+
+def _run_joined_collector(addr, ticket, counts: List[int], idx: int):
+    import jax
+
+    from repro.core.workers import DataCollectionWorker, ExplorationSchedule
+    spec = pickle.loads(ticket["spec"])
+    rc = spec.run_cfg
+    cid = int(ticket["collector_id"])
+    sched = spec.exploration or ExplorationSchedule()
+    policy_srv = TcpParameterServer(addr, ticket["stores"]["policy"],
+                                    "policy")
+    data = TcpDataServer(addr,
+                         n_collectors=ticket.get("n_collectors", 1),
+                         push_timeout=ticket.get("push_timeout", 30.0),
+                         claim_backoff=ticket.get("claim_backoff", 0.002))
+    # same base collector key as every engine (split(key(seed), 4)[0]);
+    # the worker folds the collector id in itself, so a joiner's stream
+    # matches a local fleet member with the same id
+    key = jax.random.split(jax.random.key(spec.seed), 4)[0]
+    w = DataCollectionWorker(spec.env, policy_srv, data, None, key,
+                             speed=rc.collect_speed, collector_id=cid,
+                             noise_scale=sched.scale_for(cid),
+                             envs_per_step=rc.envs_per_collector)
+    try:
+        # warmup: claim nothing until a policy exists — a claimed ticket
+        # must always be fulfilled by the very next step
+        while not w.poll_policy():
+            time.sleep(0.005)
+        while True:
+            g = data.try_claim(cid, k=w.envs_per_step)
+            if not g:
+                break               # global target fully claimed: done
+            t_step = time.monotonic()
+            dur = w.step(g)
+            if rc.pace_collection and dur is not None:
+                time.sleep(max(dur - (time.monotonic() - t_step), 0.0))
+    except (F.ProtocolError, OSError):
+        # plane unreachable: refund our own in-flight tickets so the
+        # criterion does not stall on this joiner, then stop
+        try:
+            data.refund_inflight(cid)
+        except (F.ProtocolError, OSError):
+            pass
+    finally:
+        counts[idx] = w.collected
+        policy_srv.close()
+        data.close()
+
+
+def join_as_collectors(addr: str, *, n_collectors: int = 1) -> int:
+    """Join a live run at ``addr`` ('host:port') as ``n_collectors``
+    additional remote collectors (one thread each, one JOIN ticket and
+    one collector id each). Blocks until the run's global criterion is
+    fully claimed; returns the number of trajectories THIS process
+    contributed."""
+    target = parse_addr(addr)
+    counts = [0] * int(n_collectors)
+    threads = []
+    for i in range(int(n_collectors)):
+        ticket = request_join_ticket(target)
+        th = threading.Thread(target=_run_joined_collector,
+                              args=(target, ticket, counts, i),
+                              name=f"join-collector:{ticket['collector_id']}",
+                              daemon=True)
+        th.start()
+        threads.append(th)
+    for th in threads:
+        th.join()
+    return sum(counts)

@@ -1,0 +1,141 @@
+#!/usr/bin/env python
+"""Stdlib link-and-anchor checker for the repo's markdown tier.
+
+Walks README.md plus every ``docs/*.md`` (and any extra paths given on
+the command line) and fails (exit 1) on:
+
+* relative links to files that don't exist (``[x](docs/FOO.md)``,
+  ``[x](../README.md)``);
+* fragment links whose anchor matches no heading in the target file
+  (``[x](ARCHITECTURE.md#mode-matrix)``, ``[x](#local-heading)``),
+  using GitHub's slug rules (lowercase, punctuation stripped, spaces
+  to dashes, ``-N`` suffixes for duplicates);
+* reference-style links (``[x][ref]``) with no matching definition.
+
+External links (http/https/mailto) are deliberately NOT fetched — CI
+must not flake on the internet; they are only syntax-checked. Fenced
+code blocks and inline code spans are stripped first so shell snippets
+never false-positive.
+
+Usage:  python tools/docs_check.py [root] [extra.md ...]
+        make docs-check
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+_FENCE_RE = re.compile(r"^(```|~~~)")
+_CODE_SPAN_RE = re.compile(r"`[^`]*`")
+# [text](target) — target may carry an optional "title"
+_INLINE_LINK_RE = re.compile(r"\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+# [text][ref] and [ref]: definition lines
+_REF_LINK_RE = re.compile(r"\[[^\]]+\]\[([^\]]+)\]")
+_REF_DEF_RE = re.compile(r"^\s*\[([^\]]+)\]:\s*(\S+)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+
+
+def strip_code(text: str) -> List[str]:
+    """Markdown source -> lines with fenced blocks and inline code spans
+    blanked (line count preserved so reports stay line-accurate)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else _CODE_SPAN_RE.sub("", line))
+    return out
+
+
+def github_slug(heading: str, seen: Dict[str, int]) -> str:
+    """GitHub's anchor algorithm: strip markdown emphasis/code/links,
+    lowercase, drop punctuation, spaces->dashes, -N for duplicates."""
+    h = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)   # links -> text
+    h = re.sub(r"[`*_]", "", h).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    slug = h.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def anchors_of(path: Path, cache: Dict[Path, Set[str]]) -> Set[str]:
+    if path not in cache:
+        seen: Dict[str, int] = {}
+        slugs: Set[str] = set()
+        for line in strip_code(path.read_text(encoding="utf-8")):
+            m = _HEADING_RE.match(line)
+            if m:
+                slugs.add(github_slug(m.group(2), seen))
+        cache[path] = slugs
+    return cache[path]
+
+
+def check_file(md: Path, root: Path,
+               anchor_cache: Dict[Path, Set[str]]) -> List[str]:
+    errors: List[str] = []
+    text = md.read_text(encoding="utf-8")
+    lines = strip_code(text)
+
+    ref_defs: Set[str] = set()
+    links: List[Tuple[int, str]] = []
+    for i, line in enumerate(lines, 1):
+        d = _REF_DEF_RE.match(line)
+        if d:
+            ref_defs.add(d.group(1).lower())
+            continue
+        for m in _INLINE_LINK_RE.finditer(line):
+            links.append((i, m.group(1)))
+        for m in _REF_LINK_RE.finditer(line):
+            links.append((i, f"ref:{m.group(1).lower()}"))
+
+    for lineno, target in links:
+        where = f"{md.relative_to(root)}:{lineno}"
+        if target.startswith("ref:"):
+            if target[4:] not in ref_defs:
+                errors.append(f"{where}: undefined link reference "
+                              f"[{target[4:]}]")
+            continue
+        if re.match(r"^[a-zA-Z][a-zA-Z0-9+.-]*:", target):   # http:, mailto:
+            continue
+        path_part, _, frag = target.partition("#")
+        dest = md if not path_part else (md.parent / path_part).resolve()
+        if not dest.exists():
+            errors.append(f"{where}: broken link -> {target} "
+                          f"(no such file {path_part})")
+            continue
+        if frag:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ".markdown"):
+                continue                     # can't anchor-check non-markdown
+            if frag.lower() not in anchors_of(dest, anchor_cache):
+                errors.append(f"{where}: broken anchor -> {target} "
+                              f"(no heading slugs to '#{frag}')")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    root = Path(argv[1]).resolve() if len(argv) > 1 else Path.cwd()
+    targets = [root / "README.md", *sorted((root / "docs").glob("*.md")),
+               *(root / a for a in argv[2:])]
+    targets = [t for t in targets if t.exists()]
+    if not targets:
+        print(f"docs-check: nothing to check under {root}", file=sys.stderr)
+        return 1
+
+    cache: Dict[Path, Set[str]] = {}
+    errors: List[str] = []
+    for md in targets:
+        errors.extend(check_file(md, root, cache))
+
+    for e in errors:
+        print(f"docs-check: {e}", file=sys.stderr)
+    print(f"docs-check: {len(targets)} files, "
+          f"{len(errors)} broken link(s)/anchor(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
