@@ -1,7 +1,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 export PYTHONPATH
 
-.PHONY: test test-mesh test-procs lint docs-check bench bench-hotpath bench-hotpath-sharded soak soak-long
+.PHONY: test test-mesh test-procs test-kernels lint docs-check bench bench-hotpath bench-hotpath-sharded soak soak-long
 
 # Default aggregate = the multi-device mesh suite FIRST, then the tier-1
 # verify verbatim from ROADMAP.md. The mesh suite must run as its own
@@ -22,6 +22,12 @@ test-mesh:
 # crash restart) — the slow end-to-end subset of the tier-1 run.
 test-procs:
 	python -m pytest -q tests/test_procs.py
+
+# Kernel-tier parity sweep through the ops dispatchers: every pallas
+# kernel in interpret mode vs its pure-jnp oracle, pinned to CPU (the
+# CI `kernels-interpret` step; policy in docs/KERNELS.md).
+test-kernels:
+	JAX_PLATFORMS=cpu python -m pytest -q tests/test_kernels_interpret.py
 
 # Correctness lint (ruff F/E9 rules, config in pyproject.toml). CI
 # installs ruff from requirements-dev.txt; hosts without it fall back to

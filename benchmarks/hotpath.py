@@ -29,6 +29,11 @@ supposed to guarantee (and what the seed code violated):
   push / changed pull / unchanged-pull-x100 latencies and a tcp data
   round-trip (transport_*_usec metrics, never gated), plus the hard
   zero-array-bytes-on-unchanged-tcp-pull invariant.
+* with ``--imagine-fused``: the ISSUE 10 fused-imagination receipt —
+  the same rollout timed back-to-back through the legacy two-call scan
+  step and the fused ``step_fused`` dispatcher (parity ``_require``d,
+  speedup floor 1.15x hard-required; ``imagine_fused_speedup_x`` is
+  exact-floored by tools/bench_drift.py).
 
 Run without flags to (re-)write the ``BENCH_hotpath.json`` baseline at
 the repo root. With ``--check``, compares fresh numbers against the
@@ -164,6 +169,61 @@ def bench_worker_steps(metrics):
     def one_imagine():
         _block(roll(model_params, pol, s0, rc_key))
     metrics["imagine_rollout_us"] = _timeit(one_imagine, reps=10)
+    return metrics
+
+
+def bench_imagine_fused(metrics):
+    """Fused-imagination speedup (ISSUE 10) — the tentpole's receipt.
+
+    Times the SAME imagined rollout back-to-back through the legacy
+    two-call scan step (``PI.sample_with_logp`` + ``predict_assigned``,
+    ``fused=False``) and the fused ``DYN.step_fused`` dispatcher, at the
+    headline bench sizes, after ``_require``-ing the outputs agree.
+    Back-to-back on one host: the ratio is meaningful even when the
+    absolute latencies aren't comparable across machines.
+
+    ``imagine_fused_us`` / ``imagine_fused_legacy_us`` ride the 20%
+    latency gate like any ``_us`` metric. ``imagine_fused_speedup_x`` is
+    the gate the ratio itself answers to: a hard 1.15x floor here, and
+    exact-floored drift tracking in tools/bench_drift.py (dropping below
+    the committed ratio is drift; getting faster never is)."""
+    import jax.numpy as jnp
+    import jax.random as jrandom
+    from benchmarks.common import build_algo
+
+    from repro.envs import make_env
+    from repro.mbrl import dynamics as DYN
+    from repro.mbrl import policy as PI
+    from repro.mbrl.algos import _rollout_with_logp
+
+    env = make_env("pendulum")
+    ens, pol_cfg, acfg, algo = build_algo(env, "me-trpo")
+    key = jrandom.key(0)
+    mp = DYN.init_ensemble(ens, key)
+    pp = PI.init_policy(pol_cfg, key)
+    s0 = env.reset_batch(key, acfg.imagine_batch)
+    H, rfn = acfg.imagine_horizon, algo.reward_fn
+
+    legacy = jax.jit(lambda m, p, s, k: _rollout_with_logp(
+        m, p, s, k, H, rfn, fused=False))
+    fused = jax.jit(lambda m, p, s, k: _rollout_with_logp(
+        m, p, s, k, H, rfn))
+
+    out_l = _block(legacy(mp, pp, s0, key))
+    out_f = _block(fused(mp, pp, s0, key))
+    for a, b in zip(out_l, out_f):
+        _require(bool(jnp.allclose(a, b, atol=1e-4, rtol=1e-4)),
+                 "fused rollout diverged from the legacy path")
+
+    metrics["imagine_fused_us"] = _timeit(
+        lambda: _block(fused(mp, pp, s0, key)), reps=10)
+    metrics["imagine_fused_legacy_us"] = _timeit(
+        lambda: _block(legacy(mp, pp, s0, key)), reps=10)
+    speedup = round(metrics["imagine_fused_legacy_us"]
+                    / metrics["imagine_fused_us"], 2)
+    metrics["imagine_fused_speedup_x"] = speedup
+    _require(speedup >= 1.15,
+             f"fused imagination speedup {speedup}x below the 1.15x floor")
     return metrics
 
 
@@ -745,12 +805,15 @@ def run_bench(*, sharded: bool = False,
               collect_scaling: bool = False,
               env_farm: bool = False,
               serve: bool = False,
-              transport: bool = False) -> dict:
+              transport: bool = False,
+              imagine_fused: bool = False) -> dict:
     metrics = {}
     bench_worker_steps(metrics)
     bench_parameter_server(metrics)
     bench_threads_throughput(metrics)
     bench_procs_throughput(metrics)
+    if imagine_fused:
+        bench_imagine_fused(metrics)
     if collect_scaling:
         bench_collect_scaling(metrics)
     if env_farm:
@@ -823,6 +886,11 @@ def main(argv=None) -> int:
                          "a tcp data round-trip (transport_* metrics, "
                          "never gated; the zero-bytes-on-unchanged-pull "
                          "invariant IS hard-required)")
+    ap.add_argument("--imagine-fused", action="store_true",
+                    help="also measure the fused-imagination speedup: "
+                         "the same rollout through the legacy and fused "
+                         "step back-to-back (imagine_fused_* metrics; "
+                         "the 1.15x speedup floor is hard-required)")
     ap.add_argument("--sharded-child", action="store_true",
                     help=argparse.SUPPRESS)   # internal: see bench_sharded
     ap.add_argument("--out", default=str(BASELINE))
@@ -836,7 +904,8 @@ def main(argv=None) -> int:
                       collect_scaling=args.collect_scaling,
                       env_farm=args.env_farm,
                       serve=args.serve,
-                      transport=args.transport)
+                      transport=args.transport,
+                      imagine_fused=args.imagine_fused)
     for k, v in fresh["metrics"].items():
         print(f"hotpath/{k},{v}")
 
@@ -877,7 +946,9 @@ def main(argv=None) -> int:
                                      args.collect_scaling),
                                     ("env_farm_", args.env_farm),
                                     ("serve_", args.serve),
-                                    ("transport_", args.transport))
+                                    ("transport_", args.transport),
+                                    ("imagine_fused_",
+                                     args.imagine_fused))
                    if not ran]
         old = json.loads(out.read_text()).get("metrics", {})
         for k, v in old.items():

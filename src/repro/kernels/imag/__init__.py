@@ -1,0 +1,6 @@
+# Fused imagination-step kernel family (ISSUE 10): one pass per horizon
+# step — policy head + assigned-member dynamics MLP for a whole batch
+# row-block, intermediates kept in VMEM. Same tier shape as the
+# siblings: ref.py (pure-jnp oracle, the bit-reference), pallas.py (TPU
+# megakernel, validated with interpret=True), ops.py (backend dispatch +
+# the XLA-fused jnp fallback that carries the CPU speedup).

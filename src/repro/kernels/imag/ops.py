@@ -1,0 +1,145 @@
+"""Dispatching wrapper for the fused imagination step.
+
+``fused_step(members, norm, pol, s, eps, member_idx)`` runs one whole
+imagination step — policy head, reparameterised action sample, assigned-
+member dynamics forward, denormalised next state — as a single
+dispatchable unit. ``impl``:
+
+* ``pallas`` — sort rows by member, one Pallas megakernel over the
+  row-blocks (policy + member MLPs fused in VMEM, scalar-prefetch group
+  offsets, masked boundary tiles, zero-size-group skip), unsort. B rows
+  of MXU FLOPs regardless of K. Default on TPU. Differentiable: a
+  ``custom_vjp`` backs the kernel with the jnp reference's VJP, so
+  MB-MPO's gradients THROUGH the rollout keep working.
+* ``fused`` — the XLA-fused flat spelling: the policy head feeds
+  straight into one flattened ``(B, din) @ (din, K*dout)`` matmul per
+  dynamics layer with a per-layer member gather. K*B FLOPs, but tiny
+  MBRL ensembles on CPU are launch- not FLOP-bound (the same trade as
+  ``kernels/gmm``'s ``dense`` select), and collapsing the per-step
+  sort / ragged matmul / unsort / policy round-trips into this one
+  straight-line body is what cuts the CPU rollout latency (measured in
+  ``benchmarks/hotpath.py`` as ``imagine_fused_speedup_x``). Default on
+  CPU.
+* ``ref`` — the pure-jnp oracle (dense compute-all + select), the
+  bit-reference for both.
+
+``sort_plan`` precomputes the pallas impl's sort/unsort plan; the
+rollout calls it ONCE for the whole horizon's member draws so no
+argsort/bincount runs inside the scan.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.imag import ref
+
+
+def _backend() -> str:
+    try:
+        return jax.default_backend()
+    except RuntimeError:  # pragma: no cover
+        return "cpu"
+
+
+def default_impl() -> str:
+    """Backend-chosen impl: the megakernel on TPU, the XLA-fused flat
+    spelling elsewhere (CPU/GPU have no Mosaic lowering)."""
+    return "pallas" if _backend() == "tpu" else "fused"
+
+
+def sort_plan(member_idx, n_groups: int):
+    """Sort/unsort plan for the pallas impl: ``(order, offsets)``.
+
+    member_idx: (..., B) int — leading axes (e.g. the horizon) are
+    planned in one call, so the rollout scan carries precomputed plans
+    instead of re-sorting every step. ``order`` sorts the trailing axis
+    by member; ``offsets`` (..., K+1) are cumulative group offsets.
+    """
+    order = jnp.argsort(member_idx, axis=-1)
+    sizes = (member_idx[..., :, None]
+             == jnp.arange(n_groups)).sum(axis=-2)
+    zeros = jnp.zeros(sizes.shape[:-1] + (1,), jnp.int32)
+    offsets = jnp.concatenate(
+        [zeros, jnp.cumsum(sizes, axis=-1).astype(jnp.int32)], axis=-1)
+    return order, offsets
+
+
+def _fused_flat(members, norm, pol, s, eps, member_idx):
+    """XLA fallback: one flattened matmul + member gather per layer."""
+    mu = ref.policy_mu(pol, s)
+    pre = mu + jnp.exp(pol["log_std"]) * eps
+    a = jnp.tanh(pre)
+    x = jnp.concatenate([s, a], -1)
+    h = (x - norm["mu_in"]) / norm["sig_in"]
+    K = members["w"][0].shape[0]
+    col = member_idx[:, None, None]
+    n = len(members["w"])
+    for i, (w, b) in enumerate(zip(members["w"], members["b"])):
+        din, dout = w.shape[1], w.shape[2]
+        hk = (h @ w.transpose(1, 0, 2).reshape(din, K * dout)
+              ).reshape(h.shape[0], K, dout)
+        h = jnp.take_along_axis(hk, col, axis=1)[:, 0] + b[member_idx]
+        if i < n - 1:
+            h = jnp.tanh(h)
+    s2 = s + h * norm["sig_out"] + norm["mu_out"]
+    return s2, a, pre
+
+
+# ---------------------------------------------------------------- pallas
+# The kernel has no autodiff rule; MB-MPO differentiates THROUGH the
+# rollout, so the pallas impl carries a custom_vjp whose backward pass is
+# the VJP of the jnp reference on the same (sorted) rows. ``gid`` is the
+# sorted member id per row (int: its cotangent is None).
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _pallas_sorted(interpret, block_b, offsets, gid, members, norm, pol,
+                   s, eps):
+    from repro.kernels.imag import pallas as pk
+    return pk.fused_step_sorted(members, norm, pol, s, eps, offsets,
+                                block_b=block_b, interpret=interpret)
+
+
+def _pallas_sorted_fwd(interpret, block_b, offsets, gid, members, norm,
+                       pol, s, eps):
+    out = _pallas_sorted(interpret, block_b, offsets, gid, members, norm,
+                         pol, s, eps)
+    return out, (gid, members, norm, pol, s, eps)
+
+
+def _pallas_sorted_bwd(interpret, block_b, res, ct):
+    gid, members, norm, pol, s, eps = res
+    _, vjp = jax.vjp(
+        lambda m, n, p, s_, e_: ref.fused_step(m, n, p, s_, e_, gid),
+        members, norm, pol, s, eps)
+    d_members, d_norm, d_pol, d_s, d_eps = vjp(ct)
+    return None, None, d_members, d_norm, d_pol, d_s, d_eps
+
+
+_pallas_sorted.defvjp(_pallas_sorted_fwd, _pallas_sorted_bwd)
+
+
+def fused_step(members, norm, pol, s, eps, member_idx, *,
+               impl: str | None = None, interpret: bool = False,
+               plan=None, block_b: int = 128):
+    """One fused imagination step; see module docstring for impls.
+
+    ``plan``: optional precomputed ``sort_plan`` output for this step
+    (pallas impl only — ``fused``/``ref`` are row-order-blind and ignore
+    it). Returns ``(s2, a, pre)`` in input row order."""
+    if impl is None:
+        impl = default_impl()
+    if impl == "pallas":
+        if plan is None:
+            plan = sort_plan(member_idx, members["w"][0].shape[0])
+        order, offsets = plan
+        out = _pallas_sorted(interpret, block_b, offsets,
+                             member_idx[order], members, norm, pol,
+                             s[order], eps[order])
+        unsort = lambda v: jnp.zeros_like(v).at[order].set(v)
+        return tuple(unsort(v) for v in out)
+    if impl == "fused":
+        return _fused_flat(members, norm, pol, s, eps, member_idx)
+    return ref.fused_step(members, norm, pol, s, eps, member_idx)

@@ -1,0 +1,171 @@
+"""Pallas TPU megakernel for the fused imagination step (ISSUE 10).
+
+One ``pallas_call`` per horizon step: for each batch row-block the
+kernel runs the policy MLP head, forms the pre-tanh/tanh actions from
+pre-drawn noise, normalises the dynamics input into a VMEM scratch, and
+then sweeps the ensemble members sequentially — each member's whole MLP
+forward runs on the row-block with every intermediate activation held in
+VMEM (nothing spills to HBM between layers), and only the rows assigned
+to that member are accumulated into the output.
+
+Layout follows the ragged ``gmm`` kernel: rows arrive PRE-SORTED by
+member, cumulative group offsets ride in via scalar prefetch
+(``PrefetchScalarGridSpec``), boundary tiles a member only partially
+covers are row-masked with a ``broadcasted_iota`` compare, and tiles a
+member does not touch at all are skipped with ``pl.when`` — zero-size
+groups (members no row sampled) cost no MXU work.
+
+Grid: ``(B/bm, K)`` with the member dimension innermost and
+``arbitrary`` (sequential), so the per-block scratches written at
+``g == 0`` (normalised input, zeroed accumulator) stay live across the
+member sweep and the next state is emitted at ``g == K - 1``.
+
+Validated with ``interpret=True`` against ``ref`` (the pure-jnp oracle);
+on real TPUs the tiny MBRL feature dims (obs+act < 8) would be padded to
+the (8, 128) f32 tile by Mosaic — see docs/KERNELS.md for the bring-up
+checklist.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams as _CompilerParams
+
+
+def _fused_kernel(offs_ref, s_ref, eps_ref, *refs, bm, n_groups, n_dyn,
+                  n_pol):
+    dyn_w = refs[:n_dyn]
+    dyn_b = refs[n_dyn:2 * n_dyn]
+    pol_w = refs[2 * n_dyn:2 * n_dyn + n_pol]
+    pol_b = refs[2 * n_dyn + n_pol:2 * n_dyn + 2 * n_pol]
+    (log_std_ref, mu_in_ref, sig_in_ref, mu_out_ref, sig_out_ref,
+     s2_ref, a_ref, pre_ref, xn_scr, acc_scr) = refs[2 * (n_dyn + n_pol):]
+
+    i = pl.program_id(0)
+    g = pl.program_id(1)
+
+    @pl.when(g == 0)
+    def _policy_head():
+        # policy MLP + reparameterised sample, all in VMEM
+        h = s_ref[...].astype(jnp.float32)
+        for li, (w, b) in enumerate(zip(pol_w, pol_b)):
+            h = jax.lax.dot_general(
+                h, w[...].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) + b[...]
+            if li < n_pol - 1:
+                h = jnp.tanh(h)
+        pre = h + jnp.exp(log_std_ref[...].astype(jnp.float32)) \
+            * eps_ref[...].astype(jnp.float32)
+        a = jnp.tanh(pre)
+        pre_ref[...] = pre.astype(pre_ref.dtype)
+        a_ref[...] = a.astype(a_ref.dtype)
+        x = jnp.concatenate([s_ref[...].astype(jnp.float32), a], axis=1)
+        xn_scr[...] = (x - mu_in_ref[...]) / sig_in_ref[...]
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start, end = offs_ref[g], offs_ref[g + 1]
+    tile_lo = i * bm
+
+    # member g owns sorted rows [start, end); skip blocks it doesn't touch
+    @pl.when((end > tile_lo) & (start < tile_lo + bm))
+    def _member_mlp():
+        h = xn_scr[...]
+        for li, (w, b) in enumerate(zip(dyn_w, dyn_b)):
+            h = jax.lax.dot_general(
+                h, w[0].astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32) + b[0]
+            if li < n_dyn - 1:
+                h = jnp.tanh(h)
+        rows = tile_lo + jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+        mask = (rows >= start) & (rows < end)
+        acc_scr[...] += jnp.where(mask, h, 0.0)
+
+    @pl.when(g == n_groups - 1)
+    def _emit_next_state():
+        s2 = s_ref[...].astype(jnp.float32) \
+            + acc_scr[...] * sig_out_ref[...] + mu_out_ref[...]
+        s2_ref[...] = s2.astype(s2_ref.dtype)
+
+
+def fused_step_sorted(members, norm, pol, s, eps, offsets, *,
+                      block_b: int = 128, interpret: bool = False):
+    """Fused step on rows PRE-SORTED by member.
+
+    s: (B, obs); eps: (B, act); offsets: (K+1,) int32 cumulative group
+    offsets (``offsets[g]..offsets[g+1]`` are member g's rows). Returns
+    ``(s2, a, pre)`` in the same sorted order; the dispatcher owns the
+    sort/unsort (hoisted out of the rollout scan).
+    """
+    B, obs_dim = s.shape
+    act_dim = eps.shape[1]
+    K = members["w"][0].shape[0]
+    n_dyn, n_pol = len(members["w"]), len(pol["w"])
+    bm = min(block_b, B)
+    pm = (-B) % bm
+    nm = (B + pm) // bm
+    sp = jnp.pad(s, ((0, pm), (0, 0)))
+    ep = jnp.pad(eps, ((0, pm), (0, 0)))
+
+    # 1-D params ride in as (1, dim) blocks (TPU refs want >= 2-D)
+    row = lambda v: v.reshape(1, -1)
+    operands = (
+        [sp, ep]
+        + list(members["w"])                       # (K, din, dout) each
+        + [b.reshape(K, 1, -1) for b in members["b"]]
+        + list(pol["w"])                           # (din, dout) each
+        + [row(b) for b in pol["b"]]
+        + [row(pol["log_std"]), row(norm["mu_in"]), row(norm["sig_in"]),
+           row(norm["mu_out"]), row(norm["sig_out"])]
+    )
+
+    def fixed(shape):        # whole-array block, same for every (i, g)
+        nd = len(shape)
+        return pl.BlockSpec(shape, lambda i, g, offs, _n=nd: (0,) * _n)
+
+    def member_block(shape):  # (1, ·, ·) slice of a (K, ·, ·) stack at g
+        return pl.BlockSpec((1,) + shape[1:],
+                            lambda i, g, offs: (g,) + (0,) * (len(shape) - 1))
+
+    in_specs = (
+        [pl.BlockSpec((bm, obs_dim), lambda i, g, offs: (i, 0)),
+         pl.BlockSpec((bm, act_dim), lambda i, g, offs: (i, 0))]
+        + [member_block(w.shape) for w in members["w"]]
+        + [member_block((K, 1, b.shape[-1])) for b in members["b"]]
+        + [fixed(w.shape) for w in pol["w"]]
+        + [fixed((1, b.shape[-1])) for b in pol["b"]]
+        + [fixed((1, act_dim)), fixed((1, obs_dim + act_dim)),
+           fixed((1, obs_dim + act_dim)), fixed((1, obs_dim)),
+           fixed((1, obs_dim))]
+    )
+    out_specs = (
+        pl.BlockSpec((bm, obs_dim), lambda i, g, offs: (i, 0)),
+        pl.BlockSpec((bm, act_dim), lambda i, g, offs: (i, 0)),
+        pl.BlockSpec((bm, act_dim), lambda i, g, offs: (i, 0)),
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nm, K),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((bm, obs_dim + act_dim), jnp.float32),
+                        pltpu.VMEM((bm, obs_dim), jnp.float32)],
+    )
+    s2, a, pre = pl.pallas_call(
+        functools.partial(_fused_kernel, bm=bm, n_groups=K, n_dyn=n_dyn,
+                          n_pol=n_pol),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((B + pm, obs_dim), s.dtype),
+                   jax.ShapeDtypeStruct((B + pm, act_dim), s.dtype),
+                   jax.ShapeDtypeStruct((B + pm, act_dim), s.dtype)),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(offsets.astype(jnp.int32), *operands)
+    return s2[:B], a[:B], pre[:B]

@@ -1,0 +1,68 @@
+"""Pure-jnp oracle for the fused imagination step.
+
+One imagination step of the Dyna loop, as a single function of
+pre-drawn randomness::
+
+    mu   = policy_mlp(pol, s)                    # tanh-MLP mean
+    pre  = mu + exp(pol.log_std) * eps           # pre-tanh action
+    a    = tanh(pre)
+    xn   = (concat(s, a) - mu_in) / sig_in       # dynamics input norm
+    dyn  = member_mlp[member_idx[b]](xn[b])      # per-row assigned member
+    s2   = s + dyn * sig_out + mu_out
+
+``eps`` is standard-normal noise drawn OUTSIDE the step (the rollout
+hoists the whole horizon's draws; ``jax.vmap``-ing ``normal`` over
+pre-split keys reproduces the per-step draws bit-for-bit), and
+``member_idx`` is the uniform-prior member assignment from
+``mbrl.dynamics.sample_members``.
+
+This oracle is the bit-reference for the family: it spells the member
+selection exactly like the CPU ``dense`` path of ``kernels/gmm`` —
+evaluate all K members with the shared-input ``ensemble_mlp`` and
+``take_along_axis`` the assigned rows — so under the same assignment it
+is bit-identical to the legacy two-call step
+(``policy.sample_action`` + ``dynamics.predict_assigned`` on CPU). The
+Pallas megakernel and the flat XLA fallback in ``ops.py`` agree with it
+to float tolerance.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gmm import ref as gmm_ref
+
+
+def policy_mu(pol, s):
+    """Mean head of the tanh-squashed Gaussian policy — the same MLP
+    arithmetic as ``mbrl.policy.mean_action`` (tanh hidden, linear out),
+    kept local so the kernel tier never imports ``mbrl``."""
+    h = s
+    n = len(pol["w"])
+    for i, (w, b) in enumerate(zip(pol["w"], pol["b"])):
+        h = h @ w + b
+        if i < n - 1:
+            h = jnp.tanh(h)
+    return h
+
+
+def fused_step(members, norm, pol, s, eps, member_idx):
+    """One fused imagination step on a batch.
+
+    members: ``{"w": [(K, a, b), ...], "b": [(K, b), ...]}`` dynamics
+    ensemble; norm: ``mu_in/sig_in/mu_out/sig_out`` dict; pol: policy
+    params (``w``/``b``/``log_std``); s: (B, obs); eps: (B, act) standard
+    normal; member_idx: (B,) int in [0, K).
+
+    Returns ``(s2, a, pre)``: next states, tanh actions, pre-tanh
+    actions — everything the rollout scans need.
+    """
+    mu = policy_mu(pol, s)
+    pre = mu + jnp.exp(pol["log_std"]) * eps
+    a = jnp.tanh(pre)
+    x = jnp.concatenate([s, a], -1)
+    xn = (x - norm["mu_in"]) / norm["sig_in"]
+    dyn_all = gmm_ref.ensemble_mlp(members, xn)          # (K, B, obs)
+    dyn = jnp.take_along_axis(dyn_all, member_idx[None, :, None],
+                              axis=0)[0]
+    s2 = s + dyn * norm["sig_out"] + norm["mu_out"]
+    return s2, a, pre

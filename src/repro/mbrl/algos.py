@@ -41,18 +41,38 @@ class AlgoConfig:
 
 
 def _rollout_with_logp(model_params, pol_params, s0, key, H, reward_fn,
-                       predict_fn=None):
+                       predict_fn=None, *, fused=True):
     """Imagined rollout recording pre-tanh actions for exact densities.
 
-    ``predict_fn=None`` is the ensemble fast path: member assignments for
-    the whole horizon are drawn up front and each step runs the
-    single-member-per-row ``DYN.predict_assigned`` forward (no K*
-    ensemble overcompute inside the scan). A non-None ``predict_fn`` with
-    the ``(params, obs, act, key)`` contract swaps in any other world
-    model (e.g. ``wm_dynamics``)."""
+    ``predict_fn=None`` is the ensemble fast path: member assignments
+    AND policy noise for the whole horizon are drawn up front, and each
+    step is ONE fused ``DYN.step_fused`` dispatch — policy head +
+    assigned-member dynamics in a single kernel, no K* ensemble
+    overcompute and no per-step sort inside the scan. ``fused=False``
+    keeps the legacy two-call step (``PI.sample_with_logp`` +
+    ``DYN.predict_assigned``) for parity/benchmark comparison. A
+    non-None ``predict_fn`` with the ``(params, obs, act, key)``
+    contract swaps in any other world model (e.g. ``wm_dynamics``)."""
     if predict_fn is None:
         ka, kp = jax.random.split(key)
         members = DYN.sample_members(model_params, kp, (H, s0.shape[0]))
+
+        if fused:
+            act_dim = pol_params["w"][-1].shape[1]
+            eps = DYN.hoisted_noise(ka, H, s0.shape[0], act_dim)
+            plan = DYN.horizon_plan(model_params, members)
+
+            def step(carry, xs):
+                e, midx, pl_ = xs
+                s = carry
+                s2, a, pre = DYN.step_fused(model_params, pol_params, s,
+                                            e, midx, plan=pl_)
+                r = reward_fn(s, a, s2)
+                return s2, (s, pre, r)
+
+            _, (obs, pre, rew) = jax.lax.scan(
+                step, s0, (eps, members, plan))
+            return obs, pre, rew
 
         def step(carry, xs):
             k, midx = xs

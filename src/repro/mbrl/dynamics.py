@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.gmm import ops as gmm_ops
+from repro.kernels.imag import ops as imag_ops
+from repro.mbrl import policy as PI
 from repro.optim.optimizers import adam, apply_updates
 from repro.utils.jit_stats import trace_counted
 
@@ -110,8 +112,11 @@ def predict_assigned(params, obs, act, member_idx):
 
 def predict(params, obs, act, key):
     """Uniform-prior ensemble sample: s' ~ p_phi_I, I ~ U[K] (Sec. 3).
-    Legacy compute-all-then-select path; prefer ``sample_members`` +
-    ``predict_assigned`` on hot loops."""
+    Legacy compute-all-then-select path — it PAYS for all K members on
+    every call. Hot loops must not use it: imagination goes through the
+    fused step (``step_fused`` / the fused ``imagine_rollout``, one
+    ``kernels/imag`` dispatch per horizon step), and one-off assigned
+    predictions through ``sample_members`` + ``predict_assigned``."""
     preds = ensemble_forward(params, obs, act)           # (K, B, D)
     K = preds.shape[0]
     idx = jax.random.randint(key, (obs.shape[0],), 0, K)
@@ -290,25 +295,82 @@ def make_ring_trainer(cfg: EnsembleConfig, capacity: int,
     return opt, train_epoch, val_loss, update_norm
 
 
+def step_fused(params, policy_params, s, eps, member_idx, *, impl=None,
+               interpret=False, plan=None):
+    """One FUSED imagination step: policy head + reparameterised action
+    + assigned-member dynamics forward as a single ``kernels/imag``
+    dispatch (Pallas megakernel on TPU, one flat XLA body elsewhere).
+
+    s: (B, obs); eps: (B, act) standard normal (pre-drawn — hoist the
+    whole horizon's draws out of the scan); member_idx: (B,) int.
+    ``plan``: precomputed ``imag_ops.sort_plan`` slice for this step's
+    assignment (pallas impl; keeps the sort/unsort out of the scan body).
+    Returns ``(s2, a, pre)``."""
+    return imag_ops.fused_step(params["members"], params["norm"],
+                               policy_params, s, eps, member_idx,
+                               impl=impl, interpret=interpret, plan=plan)
+
+
+def horizon_plan(params, member_idx):
+    """Sort/unsort plans for a whole horizon of member assignments
+    ((H, B) int), for threading through a rollout scan — or None when the
+    backend's fused impl doesn't sort (the flat XLA path is
+    row-order-blind, so no plan is ever computed on CPU/GPU)."""
+    if imag_ops.default_impl() != "pallas":
+        return None
+    return imag_ops.sort_plan(member_idx, n_members(params))
+
+
+def hoisted_noise(key, horizon, batch, act_dim):
+    """The whole horizon's policy noise in one op, bit-identical to the
+    per-step ``normal(keys[h], (B, act))`` draws of the legacy scan."""
+    return jax.vmap(lambda k: jax.random.normal(k, (batch, act_dim)))(
+        jax.random.split(key, horizon))
+
+
 def imagine_rollout(params, policy_fn, policy_params, s0, key, horizon,
-                    reward_fn):
+                    reward_fn, *, fused=None):
     """Dyna imagination: roll the ensemble from s0 under the policy.
 
     s0: (B, D). Returns dict with (H, B, ·) arrays. Sample-then-compute:
-    the whole horizon's member assignments are drawn up front and each
-    step runs the single-member-per-row ``predict_assigned`` forward —
-    no K* ensemble overcompute inside the scan."""
+    the whole horizon's member assignments AND policy noise are drawn up
+    front, and each step is ONE fused ``step_fused`` dispatch (policy
+    head + assigned-member dynamics, no K* ensemble overcompute and no
+    per-step sort inside the scan).
+
+    ``fused=None`` auto-detects: the fused path replicates exactly the
+    tanh-Gaussian ``PI.sample_action``, so any other ``policy_fn`` (or
+    ``fused=False``) takes the legacy per-step path
+    (``policy_fn`` + ``predict_assigned``) instead."""
+    if fused is None:
+        fused = policy_fn is PI.sample_action
     ka, kp = jax.random.split(key)
     members = sample_members(params, kp, (horizon, s0.shape[0]))
+    keys = jax.random.split(ka, horizon)
+
+    if not fused:
+        def step(carry, xs):
+            k, midx = xs
+            s = carry
+            a = policy_fn(policy_params, s, k)
+            s2 = predict_assigned(params, s, a, midx)
+            r = reward_fn(s, a, s2)
+            return s2, (s, a, r)
+
+        _, (obs, act, rew) = jax.lax.scan(step, s0, (keys, members))
+        return {"obs": obs, "act": act, "rew": rew}
+
+    act_dim = policy_params["w"][-1].shape[1]
+    eps = hoisted_noise(ka, horizon, s0.shape[0], act_dim)
+    plan = horizon_plan(params, members)
 
     def step(carry, xs):
-        k, midx = xs
+        e, midx, pl_ = xs
         s = carry
-        a = policy_fn(policy_params, s, k)
-        s2 = predict_assigned(params, s, a, midx)
+        s2, a, _pre = step_fused(params, policy_params, s, e, midx,
+                                 plan=pl_)
         r = reward_fn(s, a, s2)
         return s2, (s, a, r)
 
-    _, (obs, act, rew) = jax.lax.scan(
-        step, s0, (jax.random.split(ka, horizon), members))
+    _, (obs, act, rew) = jax.lax.scan(step, s0, (eps, members, plan))
     return {"obs": obs, "act": act, "rew": rew}

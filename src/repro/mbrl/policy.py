@@ -39,10 +39,26 @@ def mean_action(params, obs):
     return h
 
 
-def sample_action(params, obs, key):
+def _noise_shape(params, obs):
+    return obs.shape[:-1] + (params["w"][-1].shape[1],)
+
+
+def sample_from_eps(params, obs, eps):
+    """Reparameterised sample from PRE-DRAWN standard-normal noise:
+    ``pre = mu + exp(log_std) * eps``, returns ``(tanh(pre), pre)``.
+
+    The single source of the sampling arithmetic — ``sample_action`` /
+    ``sample_with_logp`` draw ``eps`` and delegate here, and the fused
+    imagination step (``kernels/imag``) reproduces exactly this with the
+    whole horizon's ``eps`` hoisted out of the scan."""
     mu = mean_action(params, obs)
-    std = jnp.exp(params["log_std"])
-    return jnp.tanh(mu + std * jax.random.normal(key, mu.shape))
+    pre = mu + jnp.exp(params["log_std"]) * eps
+    return jnp.tanh(pre), pre
+
+
+def sample_action(params, obs, key):
+    eps = jax.random.normal(key, _noise_shape(params, obs))
+    return sample_from_eps(params, obs, eps)[0]
 
 
 def sample_action_scaled(params, obs, key, noise_scale):
@@ -69,11 +85,9 @@ def log_prob(params, obs, act_pre_tanh):
 
 
 def sample_with_logp(params, obs, key):
-    mu = mean_action(params, obs)
-    std = jnp.exp(params["log_std"])
-    pre = mu + std * jax.random.normal(key, mu.shape)
-    lp = log_prob(params, obs, pre)
-    return jnp.tanh(pre), pre, lp
+    eps = jax.random.normal(key, _noise_shape(params, obs))
+    a, pre = sample_from_eps(params, obs, eps)
+    return a, pre, log_prob(params, obs, pre)
 
 
 def kl_divergence(params_old, params_new, obs):

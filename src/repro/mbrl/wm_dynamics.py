@@ -176,10 +176,13 @@ class WorldModelDynamics:
         return lo + b / (self.cfg.bins - 1) * (hi - lo)
 
     def predict_fn(self):
-        """predict(params, obs, act, key) with the ensemble's contract."""
+        """predict(params, obs, act, key) with the ensemble's contract
+        (shape-checked + tagged via :func:`repro.models.api.as_predict_fn`)."""
+        from repro.models import api
         norm = self.norm
-        return lambda params, obs, act, key: self._predict(params, norm,
-                                                           obs, act, key)
+        return api.as_predict_fn(
+            lambda params, obs, act, key: self._predict(params, norm,
+                                                        obs, act, key))
 
     def predict(self, obs, act, key):
         return self._predict(self.params, self.norm, obs, act, key)

@@ -215,6 +215,36 @@ def build(cfg: ModelConfig, mesh, shape: InputShape, *, fsdp: bool = False,
 
 
 # --------------------------------------------------------------------------
+# world-model plumbing: the predict_fn contract
+
+
+def as_predict_fn(fn):
+    """Pin ``fn`` to the world-model predict contract:
+    ``predict(params, obs, act, key) -> next_obs`` with
+    ``next_obs.shape == obs.shape``.
+
+    This is the interface ``mbrl.algos.make_algo(predict_fn=...)`` swaps
+    in for the ensemble fast path (and what the fused imagination step
+    bypasses when ``predict_fn is None``). The wrapper checks the shape
+    contract AT TRACE TIME — a world model that silently returns a
+    different state layout fails at swap-in, not three layers deep in a
+    rollout scan — and tags the callable (``is_predict_fn``) so engines
+    can validate a handed-in model before wiring it to a worker."""
+
+    @functools.wraps(fn)
+    def predict(params, obs, act, key):
+        out = fn(params, obs, act, key)
+        if out.shape != obs.shape:
+            raise ValueError(
+                f"predict_fn contract: next_obs shape {out.shape} != "
+                f"obs shape {obs.shape}")
+        return out
+
+    predict.is_predict_fn = True
+    return predict
+
+
+# --------------------------------------------------------------------------
 # serve tier (repro.serve): cache growth + per-slot bundles
 
 

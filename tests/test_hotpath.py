@@ -153,6 +153,62 @@ def test_imagination_jit_no_retrace():
         f"imagination retraced {roll.trace_count - 1} times"
 
 
+def test_imagination_never_evaluates_all_k_members(monkeypatch):
+    """Hot-loop guard (ISSUE 10): the legacy compute-all-then-select
+    ``DYN.predict`` / ``DYN.ensemble_forward`` pair is still importable,
+    but imagination must never route through it.
+
+    Two teeth: (a) trace-based — tracing the fused rollout with the
+    compute-all entry points instrumented records ZERO calls; (b)
+    FLOP-based — the assigned ragged forward (``ensemble_mlp_select``,
+    the path the Pallas megakernel implements on TPU) compiles to well
+    under half the FLOPs of the all-K ``ensemble_mlp`` at K=8."""
+    from repro.envs import make_env
+    from repro.mbrl import policy as PI
+    from repro.mbrl.algos import _rollout_with_logp
+
+    env = make_env("pendulum")
+    cfg = DYN.EnsembleConfig(env.obs_dim, env.act_dim, hidden=16,
+                             n_models=3)
+    key = jax.random.key(0)
+    params = DYN.init_ensemble(cfg, key)
+    pol = PI.init_policy(PI.PolicyConfig(env.obs_dim, env.act_dim,
+                                         hidden=8), key)
+    s0 = env.reset_batch(key, 8)
+
+    calls = []
+    monkeypatch.setattr(DYN, "predict",
+                        lambda *a, **k: calls.append("predict"))
+    monkeypatch.setattr(DYN, "ensemble_forward",
+                        lambda *a, **k: calls.append("ensemble_forward"))
+    jax.eval_shape(lambda mp, pp, s, k: _rollout_with_logp(
+        mp, pp, s, k, 10, jax.vmap(env.reward)), params, pol, s0, key)
+    jax.eval_shape(lambda mp, pp, s, k: DYN.imagine_rollout(
+        mp, PI.sample_action, pp, s, k, 10, jax.vmap(env.reward)),
+        params, pol, s0, key)
+    assert not calls, f"imagination hit the compute-all path: {calls}"
+
+    from repro.kernels.gmm import ops as gmm_ops
+    K, B, D, H = 8, 64, 24, 48
+    members = {
+        "w": [jnp.ones((K, D, H)), jnp.ones((K, H, D))],
+        "b": [jnp.zeros((K, H)), jnp.zeros((K, D))],
+    }
+    x = jnp.ones((B, D))
+    idx = jnp.zeros((B,), jnp.int32)
+
+    def flops(fn, *args):
+        cost = jax.jit(fn).lower(*args).compile().cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        return cost["flops"]
+
+    all_k = flops(lambda m, v: gmm_ops.ensemble_mlp(m, v), members, x)
+    assigned = flops(lambda m, v, i: gmm_ops.ensemble_mlp_select(
+        m, v, i, impl="ref"), members, x, idx)
+    assert assigned < all_k / 2, (assigned, all_k)
+
+
 # --------------------------------------------------------- ParameterServer
 def test_pull_if_newer_semantics():
     ps = ParameterServer()

@@ -1,0 +1,182 @@
+"""CPU interpret-mode parity sweep over the OPS dispatchers (ISSUE 10).
+
+``tests/test_kernels.py`` drives the pallas modules directly; this sweep
+goes through each family's ``ops`` dispatcher — the entry point the rest
+of the codebase actually calls — pinning ``impl="pallas",
+interpret=True`` against ``impl="ref"`` (the pure-jnp oracle) on CPU.
+Runs standalone as the CI ``kernels-interpret`` step
+(``JAX_PLATFORMS=cpu make test-kernels``) so kernel regressions fail
+fast and separately from the full tier-1 wall.
+
+Edge shapes covered per the oracle-first contract (docs/KERNELS.md):
+empty groups, one group owning the full batch, groups straddling tile
+boundaries, K=1, and B not a multiple of the block size.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.gmm import ops as gmm_ops
+from repro.kernels.imag import ops as imag_ops
+from repro.kernels.imag import ref as imag_ref
+from repro.kernels.ssd import ops as ssd_ops
+
+KEY = jax.random.key(7)
+
+
+def rand(shape, i, scale=1.0):
+    return jax.random.normal(jax.random.fold_in(KEY, i), shape) * scale
+
+
+# ------------------------------------------------------------ attention
+@pytest.mark.parametrize("case", [
+    # B, Sq, Sk, Hq, Hkv, D, causal, window
+    (2, 128, 128, 4, 2, 64, True, 0),
+    (1, 64, 192, 4, 1, 64, True, 64),     # prefix cache + sliding window
+    (1, 64, 64, 2, 2, 32, False, 0),
+])
+def test_attention_ops_pallas_interpret_vs_ref(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, win = case
+    q = rand((B, Sq, Hq, D), 1)
+    k = rand((B, Sk, Hkv, D), 2)
+    v = rand((B, Sk, Hkv, D), 3)
+    out = fa_ops.attention(q, k, v, causal=causal, window=win,
+                           impl="pallas", interpret=True)
+    exp = fa_ref.naive_attention(q, k, v, causal=causal, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ------------------------------------------------------------------ ssd
+@pytest.mark.parametrize("case", [
+    # B, L, H, P, N, G, chunk
+    (2, 256, 4, 32, 16, 1, 64),
+    (1, 100, 8, 16, 32, 2, 32),           # L not a multiple of chunk
+])
+def test_ssd_ops_pallas_interpret_vs_ref(case):
+    B, L, H, P, N, G, chunk = case
+    x = rand((B, L, H, P), 10, 0.5)
+    dt = jax.nn.softplus(rand((B, L, H), 11))
+    A = -jnp.exp(rand((H,), 12, 0.3))
+    Bm = rand((B, L, G, N), 13, 0.3)
+    C = rand((B, L, G, N), 14, 0.3)
+    out = ssd_ops.ssd(x, dt, A, Bm, C, chunk=chunk, impl="pallas",
+                      interpret=True)
+    exp = ssd_ops.ssd(x, dt, A, Bm, C, chunk=chunk, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-3, rtol=1e-3)
+
+
+# ------------------------------------------------------------------ gmm
+RAGGED_CASES = [
+    # n_groups, M, K_dim, N, group sizes (sum = M)
+    (4, 64, 32, 48, (10, 0, 54, 0)),      # empty groups
+    (3, 200, 130, 70, (200, 0, 0)),       # one group owns the full batch
+    (5, 37, 16, 16, (5, 8, 0, 20, 4)),    # straddling odd-size tiles
+    (1, 128, 128, 128, (128,)),           # K=1
+    (3, 300, 96, 40, (1, 298, 1)),
+]
+
+
+@pytest.mark.parametrize("case", RAGGED_CASES)
+def test_gmm_ops_ragged_pallas_interpret_vs_ref(case):
+    G, M, Kd, N, sizes = case
+    lhs = rand((M, Kd), 20, 0.3)
+    rhs = rand((G, Kd, N), 21, 0.3)
+    gs = jnp.array(sizes, jnp.int32)
+    out = gmm_ops.grouped_matmul(lhs, rhs, gs, impl="pallas",
+                                 interpret=True)
+    exp = gmm_ops.grouped_matmul(lhs, rhs, gs, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_gmm_ops_select_pallas_interpret_vs_ref():
+    K, B, D, H = 3, 48, 12, 32
+    members = {"w": [rand((K, D, H), 22, 0.3), rand((K, H, D), 23, 0.3)],
+               "b": [rand((K, H), 24, 0.1), rand((K, D), 25, 0.1)]}
+    x = rand((B, D), 26)
+    idx = jax.random.randint(jax.random.fold_in(KEY, 27), (B,), 0, K)
+    out = gmm_ops.ensemble_mlp_select(members, x, idx, impl="pallas",
+                                      interpret=True)
+    exp = gmm_ops.ensemble_mlp_select(members, x, idx, impl="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=1e-4, rtol=1e-4)
+
+
+# ----------------------------------------------------------------- imag
+def _imag_inputs(K, B, obs, act, hid, phid, i0=30):
+    din = obs + act
+    members = {"w": [rand((K, din, hid), i0, 0.3),
+                     rand((K, hid, hid), i0 + 1, 0.3),
+                     rand((K, hid, obs), i0 + 2, 0.3)],
+               "b": [rand((K, hid), i0 + 3, 0.1),
+                     rand((K, hid), i0 + 4, 0.1),
+                     rand((K, obs), i0 + 5, 0.1)]}
+    norm = {"mu_in": rand((din,), i0 + 6, 0.1),
+            "sig_in": jnp.abs(rand((din,), i0 + 7)) + 0.5,
+            "mu_out": rand((obs,), i0 + 8, 0.05),
+            "sig_out": jnp.abs(rand((obs,), i0 + 9)) + 0.5}
+    pol = {"w": [rand((obs, phid), i0 + 10, 0.3),
+                 rand((phid, act), i0 + 11, 0.3)],
+           "b": [jnp.zeros((phid,)), jnp.zeros((act,))],
+           "log_std": jnp.full((act,), -0.5)}
+    s = rand((B, obs), i0 + 12)
+    eps = rand((B, act), i0 + 13)
+    return members, norm, pol, s, eps
+
+
+IMAG_CASES = [
+    # K, B, obs, act, hid, phid, block_b, midx mode
+    (3, 48, 3, 1, 96, 48, 128, "rand"),    # bench shape, single tile
+    (3, 48, 3, 1, 96, 48, 16, "one"),      # full group + empties, tiled
+    (3, 48, 3, 1, 96, 48, 16, "rand"),     # groups straddle tiles
+    (1, 20, 5, 2, 32, 16, 8, "rand"),      # K=1, B not tile multiple
+    (5, 37, 4, 2, 24, 12, 8, "rand"),
+]
+
+
+@pytest.mark.parametrize("case", IMAG_CASES)
+def test_imag_ops_impls_vs_oracle(case):
+    K, B, obs, act, hid, phid, bb, mode = case
+    members, norm, pol, s, eps = _imag_inputs(K, B, obs, act, hid, phid)
+    if mode == "one":
+        midx = jnp.full((B,), min(1, K - 1), jnp.int32)
+    else:
+        midx = jax.random.randint(jax.random.fold_in(KEY, 50), (B,), 0, K)
+    exp = imag_ref.fused_step(members, norm, pol, s, eps, midx)
+    got_flat = imag_ops.fused_step(members, norm, pol, s, eps, midx,
+                                   impl="fused")
+    got_pal = imag_ops.fused_step(members, norm, pol, s, eps, midx,
+                                  impl="pallas", interpret=True,
+                                  block_b=bb)
+    for got in (got_flat, got_pal):
+        for e, g in zip(exp, got):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(e),
+                                       atol=1e-4, rtol=1e-4)
+
+
+def test_imag_pallas_grad_matches_ref():
+    """MB-MPO differentiates THROUGH the fused step — the megakernel's
+    custom_vjp must agree with grads of the oracle."""
+    K, B, obs, act, hid, phid = 3, 20, 3, 1, 16, 8
+    members, norm, pol, s, eps = _imag_inputs(K, B, obs, act, hid, phid,
+                                              i0=60)
+    midx = jax.random.randint(jax.random.fold_in(KEY, 70), (B,), 0, K)
+
+    def loss(impl):
+        def f(mem, po, ss):
+            s2, a, pre = imag_ops.fused_step(mem, norm, po, ss, eps, midx,
+                                             impl=impl, interpret=True,
+                                             block_b=8)
+            return jnp.sum(s2 ** 2) + jnp.sum(a * pre)
+        return jax.grad(f, argnums=(0, 1, 2))(members, pol, s)
+
+    g_ref = loss("ref")
+    g_pal = loss("pallas")
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_pal)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   atol=1e-4, rtol=1e-4)

@@ -14,6 +14,10 @@ noise. This tool encodes those bands:
 * latencies (``*_us``, ``*_wall_s``) — 25%;
 * rates (``*_per_s``, ``*_speedup_x``) — 30% (throughputs wobble more:
   they compound scheduler + queue effects);
+* ``imagine_fused_*_speedup_x`` — exact-floored: the fused-vs-legacy
+  imagination ratio (ISSUE 10) is a back-to-back measurement on one
+  host, so host noise largely cancels; DROPPING below the committed
+  ratio is drift at any magnitude, while getting faster never is;
 * everything else numeric — 30%;
 * boolean invariants — any flip is drift.
 
@@ -80,6 +84,13 @@ def diff_pair(a_doc: Dict[str, Any], b_doc: Dict[str, Any]
         if isinstance(va, bool) or isinstance(vb, bool):
             drifted = bool(va) != bool(vb)
             rel = None
+        elif name.startswith("imagine_fused_") \
+                and name.endswith("_speedup_x"):
+            # exact-floored ratio: only a decrease is drift
+            band = 0.0
+            drifted = float(vb) < float(va)
+            rel = (None if not drifted else
+                   (float(va) - float(vb)) / max(abs(float(va)), 1e-12))
         elif band == 0.0:
             drifted = va != vb
             rel = None
